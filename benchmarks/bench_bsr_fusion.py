@@ -1,0 +1,61 @@
+"""Fig 18 (right) + Table 2 reproduction: BSR planning approaches for the
+C1 -> C2 strategy transition.
+
+Compares: unfused-no-heuristics (min rank id), per-tensor heuristic
+planning, and the fused global plan — transition time estimate, message
+count, and the Table 2-style per-sender fast/slow link volume split."""
+
+from __future__ import annotations
+
+from repro.core.costmodel import ClusterSpec, H20, LLAMA_32B
+from repro.core.topology import NvlinkIbTopology
+from repro.scenarios.elastic import TRACE_HOMOG, two_pipeline_strategy
+from repro.scenarios.hetero import strategy_annotations
+from repro.core.bsr import (BsrPlan, plan_bsr_naive, plan_fused_bsr,
+                            plan_unfused_bsr)
+
+
+def _tensors():
+    model = LLAMA_32B
+    src = two_pipeline_strategy(TRACE_HOMOG[0][1], model)   # C1: 32 H20
+    dst = two_pipeline_strategy(TRACE_HOMOG[1][1], model)   # C2: 31 H20
+    sa, da = strategy_annotations(src, model), strategy_annotations(dst, model)
+    shape = (int(model.params_per_layer // model.d_model), model.d_model)
+    return [(f"l{i}", sa[i], da[i], shape, 2) for i in range(model.n_layers)]
+
+
+def rows():
+    topo = NvlinkIbTopology(gpus_per_node=8, nvlink_gbps=900.0)
+    tensors = _tensors()
+    naive_assignments = []
+    for name, s, d, shape, isz in tensors:
+        naive_assignments.extend(
+            plan_bsr_naive(s, d, shape, name, isz).assignments)
+    plans = {
+        "naive_unfused": BsrPlan(naive_assignments, fused=False),
+        "heuristic_unfused": plan_unfused_bsr(tensors, topo),
+        "fused": plan_fused_bsr(tensors, topo),
+    }
+    out = []
+    for name, plan in plans.items():
+        t = plan.est_time(topo)
+        out.append((f"fig18/c1c2/{name}", t,
+                    f"msgs={plan.message_count()} "
+                    f"bytes={plan.total_bytes() / 1e6:.0f}MB"))
+    # Table 2: per-sender volume split over fast (NVLink) vs slow (IB)
+    fused = plans["fused"]
+    per = fused.per_sender_bytes(topo, fast_threshold=100.0)
+    for rank in sorted(per)[:8]:
+        fast, slow = per[rank]
+        out.append((f"table2/fused/R{rank}", 0.0,
+                    f"nvlink={fast / 1e6:.0f}MB ib={slow / 1e6:.0f}MB"))
+    return out
+
+
+def main():
+    for name, seconds, derived in rows():
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fig 14 reproduction: elastic training traces.
+
+Hetu (two fault-isolated pipelines + fused-BSR reconfiguration, no
+restart) vs the checkpoint-and-restart uniform baseline, on both the
+homogeneous (32 H20) and heterogeneous (16 H800 + 32 H20) traces."""
+
+from __future__ import annotations
+
+from repro.core.costmodel import ClusterSpec, H20, LLAMA_32B, paper_cluster
+from repro.scenarios.elastic import (TRACE_HETERO, TRACE_HOMOG,
+                                     checkpoint_restart_baseline, run_trace)
+
+
+def rows():
+    out = []
+    homog = ClusterSpec((H20,) * 32)
+    hetero = paper_cluster(16, 32)
+    for label, trace, cluster in (("homog", TRACE_HOMOG, homog),
+                                  ("hetero", TRACE_HETERO, hetero)):
+        hetu = run_trace(trace, cluster)
+        base = checkpoint_restart_baseline(trace, cluster)
+        for h, b in zip(hetu, base):
+            out.append((f"fig14/{label}/{h.name}/hetu_step", h.step_time_s,
+                        f"reconfig={h.reconfigure_s:.2f}s"))
+            out.append((f"fig14/{label}/{h.name}/baseline_step",
+                        b.step_time_s,
+                        f"restart={b.reconfigure_s:.0f}s"))
+    return out
+
+
+def main():
+    for name, seconds, derived in rows():
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: Pallas (interpret, correctness proxy) vs the
+XLA reference on CPU.  Wall times on CPU do NOT reflect TPU performance —
+the derived column carries the arithmetic intensities the TPU roofline
+uses instead."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, rglru_ref, ssd_scan_ref
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def rows():
+    out = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    b, h, s, dh = 1, 4, 512, 64
+    q = jax.random.normal(ks[0], (b, h, s, dh))
+    k = jax.random.normal(ks[1], (b, h, s, dh))
+    v = jax.random.normal(ks[2], (b, h, s, dh))
+    flops = 4 * b * h * s * s * dh
+    t_ref = _time(lambda *a: flash_attention_ref(*a, causal=True), q, k, v)
+    out.append(("kern/flash_attn/xla_ref", t_ref,
+                f"ai={flops / (3 * q.size * 4):.0f}flops/B"))
+    t_pl = _time(lambda *a: flash_attention(*a, causal=True,
+                                            interpret=True), q, k, v)
+    out.append(("kern/flash_attn/pallas_interp", t_pl,
+                "interpret-mode (correctness path)"))
+
+    bs, ss, hh, p, n = 1, 512, 4, 64, 128
+    x = jax.random.normal(ks[3], (bs, ss, hh, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (bs, ss, hh)))
+    A = -jnp.exp(jax.random.normal(ks[5], (hh,)) * 0.3)
+    B = jax.random.normal(ks[6], (bs, ss, n)) * 0.3
+    C = jax.random.normal(ks[7], (bs, ss, n)) * 0.3
+    t_ref = _time(lambda *a: ssd_scan_ref(*a, 128)[0], x, dt, A, B, C)
+    out.append(("kern/ssd_scan/xla_ref", t_ref, ""))
+    t_pl = _time(lambda *a: ssd_scan(*a, chunk=128, interpret=True)[0],
+                 x, dt, A, B, C)
+    out.append(("kern/ssd_scan/pallas_interp", t_pl, ""))
+
+    w = 256
+    xr = jax.random.normal(ks[0], (1, 512, w)) * 0.5
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (1, 512, w)))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (1, 512, w)))
+    lam = jax.random.normal(ks[3], (w,)) * 0.5
+    t_ref = _time(rglru_ref, xr, r, i, lam)
+    out.append(("kern/rglru/xla_ref", t_ref, "assoc-scan"))
+    t_pl = _time(lambda *a: rglru_pallas(*a, chunk=128, interpret=True),
+                 xr, r, i, lam)
+    out.append(("kern/rglru/pallas_interp", t_pl, ""))
+    return out
+
+
+def main():
+    for name, seconds, derived in rows():
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

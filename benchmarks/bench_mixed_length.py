@@ -1,0 +1,38 @@
+"""Fig 15/16 reproduction: mixed-length training policies.
+
+baseline (fixed long-context packing) vs HotSPa/Hetu-A (intra-step
+homogeneous switching) vs Hetu-B (cross-step heterogeneous strategies),
+over CommonCrawl-like and GitHub-like synthetic corpora at 32K and 16K
+context lengths."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.scenarios.mixed_length import run_mixed_length
+
+
+def rows(n_steps=20):
+    out = []
+    for corpus in ("commoncrawl", "github"):
+        for context in (32768, 16384):
+            for policy in ("baseline", "hotspa", "hetu_b"):
+                reps = run_mixed_length(policy, context=context,
+                                        corpus_name=corpus,
+                                        n_steps=n_steps, seed=7)
+                ts = np.array([r.seconds for r in reps])
+                tag = f"fig15/{corpus}_{context // 1024}k/{policy}"
+                out.append((tag, float(ts.mean()),
+                            f"p50={np.percentile(ts, 50):.2f}s "
+                            f"p95={np.percentile(ts, 95):.2f}s "
+                            f"switches={sum(r.switched for r in reps)}"))
+    return out
+
+
+def main():
+    for name, seconds, derived in rows():
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

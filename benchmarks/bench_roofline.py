@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``dryrun_results.jsonl`` (raw full-step compiles) and
+``roofline_results.jsonl`` (compositional trip-count-corrected terms) if
+present; rows report seconds per term + the dominant bottleneck."""
+
+from __future__ import annotations
+
+import json
+import os
+
+FILES = ("roofline_results.jsonl", "roofline_final.jsonl",
+         "dryrun_results.jsonl")
+
+
+def rows():
+    out = []
+    for fname in FILES:
+        if not os.path.exists(fname):
+            continue
+        kind = ("roofline_opt" if "final" in fname else
+        "roofline" if "roofline" in fname else "dryrun_raw")
+        for line in open(fname):
+            r = json.loads(line)
+            if "skipped" in r or "error" in r:
+                continue
+            t = r["roofline_seconds"]
+            dom = r["bottleneck"]
+            extra = ""
+            if "useful_flops_ratio" in r:
+                extra = f" useful={r['useful_flops_ratio']:.2f}"
+            out.append((
+                f"{kind}/{r['arch']}/{r['shape']}",
+                t["compute"] + 0.0,
+                f"mem={t['memory'] * 1e3:.1f}ms "
+                f"coll={t['collective'] * 1e3:.1f}ms "
+                f"bottleneck={dom}{extra}"))
+    if not out:
+        out.append(("roofline/missing", 0.0,
+                    "run launch/dryrun.py --all --json dryrun_results.jsonl"))
+    return out
+
+
+def main():
+    for name, seconds, derived in rows():
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Regenerate the EXPERIMENTS.md appendix tables from sweep artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables >> EXPERIMENTS.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def _load(fname):
+    rows = {}
+    for line in open(fname):
+        r = json.loads(line)
+        rows[(r["arch"].replace("-", "_").replace(".", "_"),
+              r["shape"])] = r
+    return rows
+
+
+def roofline_compare(base_f, opt_f, title):
+    base, opt = _load(base_f), _load(opt_f)
+    print(f"### {title}\n")
+    print("| arch | shape | compute (ms) base→opt | memory (ms) base→opt | "
+          "collective (ms) base→opt | bottleneck (opt) | useful base→opt |")
+    print("|---|---|---|---|---|---|---|")
+    for k in sorted(opt):
+        o = opt[k]
+        b = base.get(k, o)
+        if "skipped" in o:
+            print(f"| {k[0]} | {k[1]} | — | — | — | *skipped (sub-quadratic "
+                  f"required)* | — |")
+            continue
+        if "error" in o or "error" in b:
+            continue
+        tb, to = b["roofline_seconds"], o["roofline_seconds"]
+
+        def f(x):
+            return f"{x * 1e3:.1f}"
+
+        print(f"| {k[0]} | {k[1]} | {f(tb['compute'])} → {f(to['compute'])} "
+              f"| {f(tb['memory'])} → {f(to['memory'])} "
+              f"| {f(tb['collective'])} → {f(to['collective'])} "
+              f"| **{o['bottleneck']}** "
+              f"| {b.get('useful_flops_ratio', 0):.2f} → "
+              f"{o.get('useful_flops_ratio', 0):.2f} |")
+    print()
+
+
+def dryrun_table(fname, title):
+    rows = _load(fname)
+    print(f"### {title}\n")
+    print("| arch | shape | compile (s) | args/device (GiB) | "
+          "temps/device (GiB) |")
+    print("|---|---|---|---|---|")
+    for k, r in sorted(rows.items()):
+        if "skipped" in r:
+            print(f"| {k[0]} | {k[1]} | — | — | *skipped* |")
+            continue
+        b = r["bytes_per_device"]
+        print(f"| {k[0]} | {k[1]} | {r['compile_s']:.1f} "
+              f"| {b['arguments'] / 2**30:.2f} | {b['temps'] / 2**30:.2f} |")
+    print()
+
+
+def main():
+    if os.path.exists("roofline_final.jsonl"):
+        roofline_compare(
+            "roofline_results.jsonl", "roofline_final.jsonl",
+            "Roofline: paper-faithful baseline → optimized "
+            "(single-pod, per step)")
+    if os.path.exists("dryrun_opt.jsonl"):
+        dryrun_table("dryrun_opt.jsonl",
+                     "Optimized single-pod full-step compiles")
+    if os.path.exists("dryrun_multipod_opt.jsonl"):
+        dryrun_table("dryrun_multipod_opt.jsonl",
+                     "Optimized multi-pod (2×16×16) full-step compiles")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig13,fig15,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig13_hetero_cluster", "benchmarks.bench_hetero_cluster"),
+    ("fig14_elastic", "benchmarks.bench_elastic"),
+    ("fig15_mixed_length", "benchmarks.bench_mixed_length"),
+    ("fig18_bsr_fusion", "benchmarks.bench_bsr_fusion"),
+    ("fig17_case_study", "benchmarks.bench_case_study"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for label, modname in MODULES:
+        if filters and not any(f in label for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["rows"])
+            for name, seconds, derived in mod.rows():
+                print(f"{name},{seconds * 1e6:.0f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((label, e))
+            print(f"{label}/ERROR,0,{type(e).__name__}: {e}")
+        finally:
+            sys.stderr.write(f"[{label}: {time.time() - t0:.1f}s]\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Sharding-agnostic checkpointing.
+
+Saves the parameter/optimizer pytree as flat full arrays (npz) plus a JSON
+manifest; restore re-shards onto whatever mesh/strategy is active — so a
+checkpoint written under one parallel strategy loads under any other (the
+checkpoint-and-restart baseline of the paper's elastic scenario, §7.2).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def jnp_asarray(a, skeleton_leaf):
+    want = getattr(skeleton_leaf, "dtype", None)
+    if want is not None and str(want) != str(getattr(a, "dtype", "")):
+        return jnp.asarray(a, dtype=want)
+    return a
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict[str, Any], skeleton):
+    def rec(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rec(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [rec(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+        if isinstance(tree, tuple):
+            return tuple(rec(v, f"{prefix}{i}/") for i, v in enumerate(tree))
+        return flat[prefix[:-1]]
+    return rec(skeleton)
+
+
+def save(path: str, tree, step: int = 0, meta: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        if a.dtype.name == "bfloat16":   # npz cannot store ml_dtypes
+            a = a.astype(np.float32)
+        arrays[k] = a
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k.replace("/", "|"): v for k, v in arrays.items()})
+    manifest = {
+        "step": step,
+        "meta": meta or {},
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, skeleton, shardings=None):
+    """Restore into the structure of ``skeleton``; if ``shardings`` (a
+    matching pytree of jax.sharding.Sharding) is given, arrays are placed
+    sharded — re-sharding is free at load time."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k.replace("|", "/"): data[k] for k in data.files}
+    tree = _unflatten(flat, skeleton)
+    # restore original dtypes (bf16 was widened for npz)
+    tree = jax.tree.map(
+        lambda a, sk: jnp_asarray(a, sk), tree, skeleton)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest["step"]

@@ -1,0 +1,264 @@
+"""Analytical cluster cost model (drives the Fig 13/14/15 reproductions).
+
+The container is CPU-only, so the paper's wall-clock cluster numbers are
+reproduced with a calibrated analytical model over the paper's own
+hardware table (Appendix A.1):
+
+  H800: 990 TFLOPS bf16, 80 GB, 400 GB/s NVLink
+  H20:  148 TFLOPS bf16, 96 GB, 900 GB/s NVLink
+  inter-node: IB (25 GB/s per GPU)
+
+A *strategy* is a set of pipelines; each pipeline is a list of stages;
+each stage owns a device group (TP applied inside), a layer range and a
+micro-batch schedule.  This mirrors the paper's Appendix A.2/A.3 strategy
+tables, which are encoded verbatim as fixtures in the benchmarks.
+
+Per-step time =
+  pipeline fill/drain (1F1B or GPipe) over per-stage microbatch times
+  + cross-pipeline gradient sync (heterogeneous DP -> SplitAR over the
+    HSPMD annotations, costed per link)
+and per-stage microbatch time =
+  max over stage devices of (stage FLOPs / (TP x device FLOPS x MFU))
+  + TP collective time (2 AR of activation bytes per layer over the
+    group's NVLink) + P2P stage-boundary transfer.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class DeviceType:
+    name: str
+    tflops: float          # bf16 peak
+    mem_gb: float
+    nvlink_gbps: float
+
+
+H800 = DeviceType("H800", 990.0, 80.0, 400.0)
+H20 = DeviceType("H20", 148.0, 96.0, 900.0)
+IB_GBPS = 25.0
+MFU = 0.45                  # calibrated utilization factor
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """rank -> device type; node = 8 consecutive ranks."""
+
+    ranks: tuple[DeviceType, ...]
+
+    def node_of(self, r: int) -> int:
+        return r // 8
+
+    def link_gbps(self, a: int, b: int) -> float:
+        if self.node_of(a) == self.node_of(b):
+            return min(self.ranks[a].nvlink_gbps, self.ranks[b].nvlink_gbps)
+        return IB_GBPS
+
+
+def paper_cluster(n_h800: int = 16, n_h20: int = 32) -> ClusterSpec:
+    return ClusterSpec(tuple([H800] * n_h800 + [H20] * n_h20))
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int = 32000
+
+    @property
+    def params_per_layer(self) -> float:
+        return 4 * self.d_model ** 2 + 3 * self.d_model * self.d_ff
+
+    @property
+    def total_params(self) -> float:
+        return (self.n_layers * self.params_per_layer
+                + 2 * self.vocab * self.d_model)
+
+    def layer_flops(self, tokens: int, seq_len: int) -> float:
+        """fwd+bwd FLOPs for one layer over `tokens` tokens."""
+        dense = 6 * self.params_per_layer * tokens
+        attn = 12 * self.d_model * tokens * seq_len  # score+value matmuls
+        return dense + attn
+
+
+LLAMA_32B = ModelSpec("llama-32b", 60, 6656, 17920)
+LLAMA_70B = ModelSpec("llama-70b", 80, 8192, 28672)
+
+
+@dataclass(frozen=True)
+class Stage:
+    ranks: tuple[int, ...]       # TP group (all compute every layer)
+    layers: tuple[int, int]      # [lo, hi) layer ids
+
+    @property
+    def tp(self) -> int:
+        return len(self.ranks)
+
+    @property
+    def n_layers(self) -> int:
+        return self.layers[1] - self.layers[0]
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    stages: tuple[Stage, ...]
+    n_micro: int
+    micro_bs: int               # sequences per microbatch
+
+
+@dataclass(frozen=True)
+class Strategy:
+    pipelines: tuple[PipelineSpec, ...]
+    schedule: str = "1f1b"      # or "gpipe"
+    zero1: bool = True
+
+    def device_count(self) -> int:
+        return sum(len(s.ranks) for p in self.pipelines for s in p.stages)
+
+
+def stage_micro_time(cluster: ClusterSpec, model: ModelSpec, st: Stage,
+                     micro_tokens: int, seq_len: int) -> float:
+    """Seconds for one microbatch fwd+bwd through one stage."""
+    flops = model.layer_flops(micro_tokens, seq_len) * st.n_layers
+    slowest = min(cluster.ranks[r].tflops for r in st.ranks)
+    t_comp = flops / (st.tp * slowest * 1e12 * MFU)
+    if st.tp > 1:
+        # Megatron TP: 4 collectives (fwd+bwd) of activation size per layer
+        act_bytes = 2 * micro_tokens * model.d_model
+        link = min(cluster.link_gbps(st.ranks[0], r) for r in st.ranks[1:])
+        t_tp = st.n_layers * 4 * act_bytes * (st.tp - 1) / st.tp \
+            / (link * 1e9)
+    else:
+        t_tp = 0.0
+    return t_comp + t_tp
+
+
+def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
+                  seq_len: int) -> float:
+    micro_tokens = p.micro_bs * seq_len
+    times = [stage_micro_time(cluster, model, st, micro_tokens, seq_len)
+             for st in p.stages]
+    # stage-boundary P2P per microbatch
+    p2p = 0.0
+    for a, b in zip(p.stages[:-1], p.stages[1:]):
+        act_bytes = 2 * micro_tokens * model.d_model
+        link = cluster.link_gbps(a.ranks[-1], b.ranks[0])
+        p2p += act_bytes / (link * 1e9)
+    bottleneck = max(times)
+    # 1F1B and GPipe share the fill/drain shape: (m + s - 1) * t_max
+    fill = (p.n_micro + len(p.stages) - 1)
+    return fill * bottleneck + p2p * p.n_micro
+
+
+def dp_sync_time(cluster: ClusterSpec, model: ModelSpec,
+                 strat: Strategy) -> float:
+    """Cross-pipeline gradient synchronization (hetero DP -> SplitAR).
+
+    Ring all-reduce cost over the per-layer owner groups: each parameter
+    byte crosses the slowest link 2(n-1)/n times.
+    """
+    if len(strat.pipelines) <= 1:
+        return 0.0
+    total = 0.0
+    n_layers = model.n_layers
+    for layer in range(n_layers):
+        owners = []
+        for p in strat.pipelines:
+            for st in p.stages:
+                if st.layers[0] <= layer < st.layers[1]:
+                    owners.append(st)
+        if len(owners) <= 1:
+            continue
+        grad_bytes = model.params_per_layer * 2  # bf16 grads
+        ranks = [r for st in owners for r in st.ranks]
+        link = min(cluster.link_gbps(a, b)
+                   for a in ranks for b in ranks if a != b)
+        n = len(owners)
+        shard = grad_bytes / max(min(st.tp for st in owners), 1)
+        total += 2 * (n - 1) / n * shard / (link * 1e9)
+    return total
+
+
+def step_time(cluster: ClusterSpec, model: ModelSpec, strat: Strategy,
+              seq_len: int) -> float:
+    t_pipe = max(pipeline_time(cluster, model, p, seq_len)
+                 for p in strat.pipelines)
+    return t_pipe + dp_sync_time(cluster, model, strat)
+
+
+def memory_per_rank(model: ModelSpec, strat: Strategy) -> dict[int, float]:
+    """GB of weights(+grads+opt) per rank under the strategy."""
+    out: dict[int, float] = {}
+    n_dp = len(strat.pipelines)
+    for p in strat.pipelines:
+        for st in p.stages:
+            params = model.params_per_layer * st.n_layers / st.tp
+            bytes_per_param = 2 + 2 + (12 / n_dp if strat.zero1 else 12)
+            for r in st.ranks:
+                out[r] = out.get(r, 0.0) + params * bytes_per_param / 1e9
+    return out
+
+
+def feasible(cluster: ClusterSpec, model: ModelSpec,
+             strat: Strategy) -> bool:
+    for r, gb in memory_per_rank(model, strat).items():
+        if gb > cluster.ranks[r].mem_gb * 0.85:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# simple homogeneous strategy builder (the DeepSpeed/Megatron baselines)
+# ---------------------------------------------------------------------------
+
+def uniform_strategy(ranks: list[int], model: ModelSpec, *, dp: int, tp: int,
+                     pp: int, global_batch: int, micro_bs: int = 1,
+                     zero1: bool = True) -> Strategy:
+    assert len(ranks) == dp * tp * pp, (len(ranks), dp, tp, pp)
+    per_stage = model.n_layers // pp
+    pipelines = []
+    idx = 0
+    for d in range(dp):
+        stages = []
+        for s in range(pp):
+            grp = tuple(ranks[idx:idx + tp])
+            idx += tp
+            lo = s * per_stage
+            hi = model.n_layers if s == pp - 1 else (s + 1) * per_stage
+            stages.append(Stage(grp, (lo, hi)))
+        n_micro = max(global_batch // dp // micro_bs, 1)
+        pipelines.append(PipelineSpec(tuple(stages), n_micro, micro_bs))
+    return Strategy(tuple(pipelines), zero1=zero1)
+
+
+def best_uniform(cluster: ClusterSpec, model: ModelSpec, ranks: list[int],
+                 global_batch: int, seq_len: int) -> tuple[Strategy, float]:
+    """Grid-search the best homogeneous strategy (the baselines' tuner)."""
+    best = None
+    n = len(ranks)
+    for tp in (1, 2, 4, 8):
+        for pp in (1, 2, 3, 4, 5, 6, 8):
+            if n % (tp * pp):
+                continue
+            dp = n // (tp * pp)
+            if model.n_layers < pp or global_batch % dp:
+                continue
+            for mbs in (1, 2, 4):
+                if (global_batch // dp) % mbs:
+                    continue
+                st = uniform_strategy(ranks, model, dp=dp, tp=tp, pp=pp,
+                                      global_batch=global_batch,
+                                      micro_bs=mbs)
+                if not feasible(cluster, model, st):
+                    continue
+                t = step_time(cluster, model, st, seq_len)
+                if best is None or t < best[1]:
+                    best = (st, t)
+    if best is None:
+        raise RuntimeError("no feasible uniform strategy")
+    return best

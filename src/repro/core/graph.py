@@ -1,0 +1,405 @@
+"""User-facing computation graph with HSPMD annotation deduction (paper §5.1-5.2).
+
+The user writes a *single-device-view* program; leaf operators
+(placeholders, parameters) and explicit :class:`CommOp` nodes carry
+annotations — every other tensor's annotation is **deduced**:
+
+* ``DG Union`` / ``HSize`` unification converts all inputs to the largest
+  HSize (paper Fig 10) and requires aligned DG unions afterwards;
+* per-subgroup ``DS`` deduction mirrors classical SPMD rules (the 3D x 2D
+  Dot table of Fig 11 is implemented verbatim);
+* ``HDim`` deduction follows the same rule table one level up.
+
+Tensors may carry *multiple* annotations simultaneously (paper §6.1): all
+deduction runs synchronously per annotation index, producing one annotated
+graph per parallel strategy out of a single user graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from .annotations import DG, DS, DUP, HSPMD, PARTIAL
+from .symbolic import Dim
+
+
+class DeductionError(ValueError):
+    pass
+
+
+@dataclass
+class Tensor:
+    name: str
+    shape: tuple[Dim, ...]
+    annots: list[HSPMD] = field(default_factory=list)
+    producer: "Op | None" = None
+
+    @property
+    def annot(self) -> HSPMD:
+        if not self.annots:
+            raise DeductionError(f"tensor {self.name!r} has no annotation")
+        return self.annots[0]
+
+    @property
+    def n_strategies(self) -> int:
+        return len(self.annots)
+
+    def __repr__(self):
+        return f"Tensor({self.name}, {self.shape}, {len(self.annots)} annot(s))"
+
+
+@dataclass
+class Op:
+    kind: str
+    inputs: list[Tensor]
+    outputs: list[Tensor]
+    attrs: dict = field(default_factory=dict)
+
+    def __repr__(self):
+        ins = ",".join(t.name for t in self.inputs)
+        outs = ",".join(t.name for t in self.outputs)
+        return f"Op<{self.kind}>({ins} -> {outs})"
+
+
+# ---------------------------------------------------------------------------
+# HSize / DG Union conversion (paper Fig 10)
+# ---------------------------------------------------------------------------
+
+def convert_hsize(annot: HSPMD, hsize: int) -> HSPMD:
+    """Losslessly re-express ``annot`` with a larger HSize by splitting the
+    outermost DS entry across new subgroups (semantic equivalence is
+    preserved: same device -> shard mapping)."""
+    if annot.hsize == hsize:
+        return annot
+    if annot.hsize != 1:
+        raise DeductionError(
+            f"can only convert HSize=1 annotations (got {annot.hsize} -> {hsize})")
+    ds, dg = annot.dss[0], annot.dgs[0]
+    if not ds.entries:
+        raise DeductionError("cannot split an un-sharded single-device annot")
+    d0, n0 = ds.entries[0]
+    if n0 % hsize != 0:
+        raise DeductionError(
+            f"outermost entry {d0}:{n0} not divisible by HSize {hsize}")
+    sub_n = n0 // hsize
+    rest = ds.entries[1:]
+    sub_entries = ([(d0, sub_n)] if sub_n > 1 else []) + list(rest)
+    sub_ds = DS(sub_entries)
+    per = len(dg) // hsize
+    dgs = [dg.devices[i * per:(i + 1) * per] for i in range(hsize)]
+    return HSPMD(dgs, [sub_ds] * hsize, hdim=d0)
+
+
+def unify_inputs(annots: list[HSPMD]) -> list[HSPMD]:
+    """Convert all input annotations to the largest HSize (Fig 10) and
+    verify the DG unions align."""
+    target = max(a.hsize for a in annots)
+    out = [convert_hsize(a, target) if a.hsize < target else a for a in annots]
+    base = out[0]
+    for a in out[1:]:
+        if not a.same_dg_union(base):
+            raise DeductionError(
+                "DG unions do not align after HSize conversion; insert a "
+                "CommOp to reshard (paper §5.2)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-op deduction rules
+# ---------------------------------------------------------------------------
+
+def _deduce_elementwise(ins: list[HSPMD], shapes) -> HSPMD:
+    u = unify_inputs(ins)
+    base = u[0]
+    for a in u[1:]:
+        if not (a.same_ds_union(base) and a.hdim == base.hdim
+                and a.hsplits == base.hsplits):
+            raise DeductionError(
+                "elementwise operands must share sharding; insert CommOp")
+    return base
+
+
+def _dot_ds(x: DS, w: DS, x_ndim: int) -> DS:
+    """Fig 11 (left): DS deduction for Dot(X[..., k], W[k, n]).
+
+    Split on X's batch/m dims passes through; split on W's n dim becomes
+    the output's last dim; matched contraction splits turn into Partial;
+    Duplicate absorbs the rest.
+    """
+    n_dev = x.num_devices
+    if w.num_devices != n_dev:
+        raise DeductionError("operand subgroups have different device counts")
+    kx = x.get(x_ndim - 1)          # X contraction split
+    kw = w.get(0)                   # W contraction split
+    if kx != kw:
+        raise DeductionError(
+            f"contraction dim split mismatch ({kx} vs {kw}); insert CommOp")
+    entries: list[tuple[int, int]] = []
+    for d in range(x_ndim - 1):     # batch / m dims
+        n = x.get(d)
+        if n > 1:
+            entries.append((d, n))
+    n_split = w.get(1)
+    if n_split > 1:
+        entries.append((x_ndim - 1, n_split))
+    partial = x.get(PARTIAL) * w.get(PARTIAL) * kx
+    if partial > 1:
+        entries.append((PARTIAL, partial))
+    used = 1
+    for _, n in entries:
+        used *= n
+    if n_dev % used != 0:
+        raise DeductionError(f"inconsistent sharding: {used} does not divide {n_dev}")
+    dup = n_dev // used
+    if dup > 1:
+        entries.append((DUP, dup))
+    return DS(entries)
+
+
+def _dot_hdim(x_hdim: int, w_hdim: int, x_ndim: int) -> int:
+    """Fig 11 (right): HDim deduction for Dot."""
+    if x_hdim == PARTIAL or w_hdim == PARTIAL:
+        return PARTIAL
+    if x_hdim == x_ndim - 1 or w_hdim == 0:
+        # contraction dim split across subgroups (must match on both sides)
+        if (x_hdim == x_ndim - 1) != (w_hdim == 0):
+            raise DeductionError("top-tier contraction split must match; "
+                                 "insert CommOp")
+        return PARTIAL
+    if x_hdim >= 0:
+        if w_hdim >= 0:
+            raise DeductionError("both operands top-split on non-contraction "
+                                 "dims; insert CommOp")
+        return x_hdim
+    if w_hdim == 1:
+        return x_ndim - 1
+    return DUP
+
+
+def _deduce_dot(ins: list[HSPMD], shapes) -> HSPMD:
+    x_ndim = len(shapes[0])
+    if len(shapes[1]) != 2:
+        raise DeductionError("Dot expects a 2D weight operand")
+    xa, wa = unify_inputs(ins)
+    dss = [_dot_ds(xs, ws, x_ndim) for xs, ws in zip(xa.dss, wa.dss)]
+    hdim = _dot_hdim(xa.hdim, wa.hdim, x_ndim)
+    hsplits = xa.hsplits if (xa.hdim == hdim and xa.hsplits) else None
+    return HSPMD(xa.dgs, dss, hdim=hdim, hsplits=hsplits)
+
+
+def _deduce_sum(ins: list[HSPMD], shapes, dim: int) -> HSPMD:
+    (a,) = ins
+    ndim = len(shapes[0])
+    dss = []
+    for ds in a.dss:
+        entries = []
+        partial = ds.get(PARTIAL)
+        for d, n in ds.entries:
+            if d == dim:
+                partial *= n          # reduced dim's split becomes Partial
+            elif d >= 0:
+                nd = d - 1 if d > dim else d
+                entries.append((nd, n))
+            elif d == DUP:
+                entries.append((DUP, n))
+        if partial > 1:
+            entries.append((PARTIAL, partial))
+        dss.append(DS(entries))
+    if a.hdim == dim:
+        hdim = PARTIAL
+    elif a.hdim > dim:
+        hdim = a.hdim - 1
+    else:
+        hdim = a.hdim
+    return HSPMD(a.dgs, dss, hdim=hdim,
+                 hsplits=a.hsplits if hdim == a.hdim else None)
+
+
+def _deduce_transpose(ins: list[HSPMD], shapes, perm) -> HSPMD:
+    """Sharded dims follow their tensor dims through the permutation."""
+    (a,) = ins
+    inv = {old: new for new, old in enumerate(perm)}
+    dss = []
+    for ds in a.dss:
+        dss.append(DS([(inv[d] if d >= 0 else d, n) for d, n in ds.entries]))
+    hdim = inv[a.hdim] if a.hdim >= 0 else a.hdim
+    return HSPMD(a.dgs, dss, hdim=hdim, hsplits=a.hsplits)
+
+
+def _deduce_reshape(ins: list[HSPMD], shapes, new_shape) -> HSPMD:
+    """Paper §5.2: Reshape has specialized deduction.  Supported cases:
+    every split dim must map to a dim of the new shape whose size is a
+    multiple of the shard count and whose position is unambiguous
+    (leading-dims product preserved); otherwise the user must insert a
+    CommOp to replicate first."""
+    (a,) = ins
+    old_shape = shapes[0]
+
+    def map_dim(d: int) -> int:
+        # a dim maps if the product of dims before it is preserved
+        import math
+        before = math.prod(old_shape[:d])
+        acc = 1
+        for nd, size in enumerate(new_shape):
+            if acc == before and new_shape[nd] % 1 == 0:
+                return nd
+            acc *= size
+        raise DeductionError(
+            f"reshape moves sharded dim {d}; insert CommOp to replicate")
+
+    dss = []
+    for ds in a.dss:
+        entries = []
+        for d, n in ds.entries:
+            if d >= 0:
+                nd = map_dim(d)
+                if new_shape[nd] % n != 0:
+                    raise DeductionError(
+                        f"reshaped dim {nd} size {new_shape[nd]} not "
+                        f"divisible by {n} shards")
+                entries.append((nd, n))
+            else:
+                entries.append((d, n))
+        dss.append(DS(entries))
+    hdim = map_dim(a.hdim) if a.hdim >= 0 else a.hdim
+    return HSPMD(a.dgs, dss, hdim=hdim, hsplits=a.hsplits)
+
+
+DEDUCTION_RULES = {
+    "gelu": lambda ins, shapes, attrs: ins[0],
+    "relu": lambda ins, shapes, attrs: ins[0],
+    "scale": lambda ins, shapes, attrs: ins[0],
+    "add": lambda ins, shapes, attrs: _deduce_elementwise(ins, shapes),
+    "mul": lambda ins, shapes, attrs: _deduce_elementwise(ins, shapes),
+    "dot": lambda ins, shapes, attrs: _deduce_dot(ins, shapes),
+    "sum": lambda ins, shapes, attrs: _deduce_sum(ins, shapes, attrs["dim"]),
+    "transpose": lambda ins, shapes, attrs: _deduce_transpose(
+        ins, shapes, attrs["perm"]),
+    "reshape": lambda ins, shapes, attrs: _deduce_reshape(
+        ins, shapes, attrs["new_shape"]),
+}
+
+
+# ---------------------------------------------------------------------------
+# graph builder
+# ---------------------------------------------------------------------------
+
+class Graph:
+    """Single-device-view program with declarative HSPMD annotations."""
+
+    def __init__(self):
+        self.ops: list[Op] = []
+        self.tensors: dict[str, Tensor] = {}
+        self._n = 0
+
+    # -- leaves -------------------------------------------------------------
+    def _add_tensor(self, name, shape, annots=None, producer=None) -> Tensor:
+        if name in self.tensors:
+            raise ValueError(f"duplicate tensor {name}")
+        t = Tensor(name, tuple(shape), list(annots or []), producer)
+        self.tensors[name] = t
+        return t
+
+    def placeholder(self, name: str, shape, annots: Sequence[HSPMD]) -> Tensor:
+        t = self._add_tensor(name, shape, annots)
+        self.ops.append(Op("placeholder", [], [t]))
+        t.producer = self.ops[-1]
+        return t
+
+    def parameter(self, name: str, shape, annots: Sequence[HSPMD]) -> Tensor:
+        t = self._add_tensor(name, shape, annots)
+        self.ops.append(Op("parameter", [], [t]))
+        t.producer = self.ops[-1]
+        return t
+
+    # -- CommOp (§5.1) -------------------------------------------------------
+    def comm(self, x: Tensor, annots: Sequence[HSPMD] | HSPMD,
+             name: str | None = None) -> Tensor:
+        if isinstance(annots, HSPMD):
+            annots = [annots]
+        name = name or f"{x.name}'"
+        out = self._add_tensor(name, x.shape, list(annots))
+        op = Op("comm", [x], [out], {"id": sum(1 for o in self.ops
+                                               if o.kind == "comm") + 1})
+        self.ops.append(op)
+        out.producer = op
+        return out
+
+    # -- compute ops ----------------------------------------------------------
+    def _compute(self, kind: str, ins: list[Tensor], out_shape,
+                 name: str | None = None, **attrs) -> Tensor:
+        name = name or f"{kind}_{self._n}"
+        self._n += 1
+        out = self._add_tensor(name, out_shape)
+        op = Op(kind, list(ins), [out], dict(attrs))
+        self.ops.append(op)
+        out.producer = op
+        return out
+
+    def gelu(self, x, name=None):
+        return self._compute("gelu", [x], x.shape, name)
+
+    def relu(self, x, name=None):
+        return self._compute("relu", [x], x.shape, name)
+
+    def add(self, a, b, name=None):
+        return self._compute("add", [a, b], a.shape, name)
+
+    def mul(self, a, b, name=None):
+        return self._compute("mul", [a, b], a.shape, name)
+
+    def dot(self, x, w, name=None):
+        out_shape = tuple(x.shape[:-1]) + (w.shape[-1],)
+        return self._compute("dot", [x, w], out_shape, name)
+
+    def sum(self, x, dim: int, name=None):
+        out_shape = tuple(s for i, s in enumerate(x.shape) if i != dim)
+        return self._compute("sum", [x], out_shape, name, dim=dim)
+
+    def transpose(self, x, perm, name=None):
+        out_shape = tuple(x.shape[p] for p in perm)
+        return self._compute("transpose", [x], out_shape, name,
+                             perm=tuple(perm))
+
+    def reshape(self, x, new_shape, name=None):
+        return self._compute("reshape", [x], tuple(new_shape), name,
+                             new_shape=tuple(new_shape))
+
+    # -- deduction (§5.2) -----------------------------------------------------
+    def deduce(self) -> "Graph":
+        """Fill in annotations for every tensor, per strategy index."""
+        n_strat = max((len(t.annots) for t in self.tensors.values()
+                       if t.annots), default=1)
+        for op in self.ops:
+            if op.kind in ("placeholder", "parameter", "comm"):
+                for t in op.outputs:
+                    if not t.annots:
+                        raise DeductionError(f"leaf/comm {t.name} needs annots")
+                    if len(t.annots) not in (1, n_strat):
+                        raise DeductionError(
+                            f"{t.name}: {len(t.annots)} annots, expected "
+                            f"1 or {n_strat}")
+                    if len(t.annots) == 1 and n_strat > 1:
+                        t.annots = t.annots * n_strat
+                continue
+            rule = DEDUCTION_RULES.get(op.kind)
+            if rule is None:
+                raise DeductionError(f"no deduction rule for op {op.kind}")
+            shapes = [t.shape for t in op.inputs]
+            for t in op.outputs:
+                t.annots = []
+            for k in range(n_strat):
+                ins = [t.annots[k] for t in op.inputs]
+                out = rule(ins, shapes, op.attrs)
+                for t in op.outputs:
+                    t.annots.append(out)
+        return self
+
+    @property
+    def comm_ops(self) -> list[Op]:
+        return [o for o in self.ops if o.kind == "comm"]
+
+    def parameters(self) -> list[Tensor]:
+        return [o.outputs[0] for o in self.ops if o.kind == "parameter"]

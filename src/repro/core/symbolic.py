@@ -1,0 +1,109 @@
+"""Symbolic shape extension (paper §5.5).
+
+Annotations define the sharding *pattern*; concrete shard shapes resolve at
+runtime.  Tensor metadata may carry symbolic dims (e.g. ``B`` for batch,
+``S`` for sequence); constraint-preserving arithmetic (``B // 2`` when
+splitting the batch dim) is tracked as expression trees and bound to
+integers when inputs arrive.  Binding validates divisibility so invalid
+symbol usage is rejected before it can produce shape-mismatched
+communication (paper footnote 3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Union
+
+Dim = Union[int, "SymExpr"]
+
+
+class SymExpr:
+    """Base for symbolic dimension expressions."""
+
+    def __add__(self, o): return _binop("+", self, o)
+    def __radd__(self, o): return _binop("+", o, self)
+    def __mul__(self, o): return _binop("*", self, o)
+    def __rmul__(self, o): return _binop("*", o, self)
+    def __floordiv__(self, o): return _binop("//", self, o)
+    def __sub__(self, o): return _binop("-", self, o)
+
+    def bind(self, env: Mapping[str, int]) -> int:
+        raise NotImplementedError
+
+    def free_symbols(self) -> set[str]:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Sym(SymExpr):
+    name: str
+
+    def bind(self, env):
+        if self.name not in env:
+            raise KeyError(f"unbound symbol {self.name!r}")
+        return int(env[self.name])
+
+    def free_symbols(self):
+        return {self.name}
+
+    def __repr__(self):
+        return self.name
+
+
+@dataclass(frozen=True)
+class BinOp(SymExpr):
+    op: str
+    lhs: Dim
+    rhs: Dim
+
+    def bind(self, env):
+        l = self.lhs.bind(env) if isinstance(self.lhs, SymExpr) else self.lhs
+        r = self.rhs.bind(env) if isinstance(self.rhs, SymExpr) else self.rhs
+        if self.op == "+":
+            return l + r
+        if self.op == "-":
+            return l - r
+        if self.op == "*":
+            return l * r
+        if self.op == "//":
+            if r == 0 or l % r != 0:
+                raise ValueError(
+                    f"symbolic dim {self!r} binds to non-divisible {l}//{r} "
+                    f"— invalid symbol usage (paper §5.5 verification)")
+            return l // r
+        raise ValueError(self.op)
+
+    def free_symbols(self):
+        out = set()
+        for x in (self.lhs, self.rhs):
+            if isinstance(x, SymExpr):
+                out |= x.free_symbols()
+        return out
+
+    def __repr__(self):
+        return f"({self.lhs}{self.op}{self.rhs})"
+
+
+def _binop(op: str, l, r) -> BinOp:
+    return BinOp(op, l, r)
+
+
+def bind_shape(shape: tuple[Dim, ...], env: Mapping[str, int]) -> tuple[int, ...]:
+    out = []
+    for d in shape:
+        out.append(d.bind(env) if isinstance(d, SymExpr) else int(d))
+        if out[-1] <= 0:
+            raise ValueError(f"dim {d!r} bound to non-positive {out[-1]}")
+    return tuple(out)
+
+
+def is_concrete(shape: tuple[Dim, ...]) -> bool:
+    return all(not isinstance(d, SymExpr) for d in shape)
+
+
+def free_symbols(shape: tuple[Dim, ...]) -> set[str]:
+    out: set[str] = set()
+    for d in shape:
+        if isinstance(d, SymExpr):
+            out |= d.free_symbols()
+    return out

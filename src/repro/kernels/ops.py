@@ -1,0 +1,48 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``use_kernel`` policy:
+  * ``"auto"``   — Pallas on TPU backends, XLA reference elsewhere
+                   (this CPU container always takes the reference path
+                   outside of interpret-mode tests);
+  * ``"pallas"`` — force the kernel (pass ``interpret=True`` on CPU);
+  * ``"ref"``    — force the pure-jnp oracle.
+
+The model layers call these wrappers, so flipping one config flag moves
+every hot spot onto the TPU kernels without touching model code.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash_pallas
+from .rglru_scan import rglru_pallas as _rglru_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=None, use_kernel="auto",
+              interpret=False):
+    """q: (B,H,Sq,D); k,v: (B,K,Sk,D)."""
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=interpret or not _on_tpu())
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssd(x, dt, A, B, C, *, chunk=128, use_kernel="auto", interpret=False):
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                           interpret=interpret or not _on_tpu())
+    return _ref.ssd_scan_ref(x, dt, A, B, C, chunk)
+
+
+def rglru(x, r, i, lam, *, chunk=128, use_kernel="auto", interpret=False):
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _rglru_pallas(x, r, i, lam, chunk=chunk,
+                             interpret=interpret or not _on_tpu())
+    return _ref.rglru_ref(x, r, i, lam)

@@ -1,0 +1,30 @@
+"""Global kernel dispatch policy.
+
+``set_policy("pallas")`` flips every hot spot (attention, SSD scan,
+RG-LRU scan) in the model layers onto the Pallas TPU kernels;
+``"ref"`` forces the pure-XLA path (the default on CPU, and the path
+the multi-pod dry-run lowers — Mosaic kernels target real TPUs).
+"""
+
+from __future__ import annotations
+
+_POLICY = "auto"
+
+
+def set_policy(policy: str) -> None:
+    global _POLICY
+    assert policy in ("auto", "pallas", "ref")
+    _POLICY = policy
+
+
+def get_policy() -> str:
+    return _POLICY
+
+
+def use_pallas() -> bool:
+    import jax
+    if _POLICY == "pallas":
+        return True
+    if _POLICY == "ref":
+        return False
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rglru import rglru_scan as _rglru_assoc
+from repro.models.ssm import ssd_chunked as _ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, K, Sk, D) with H % K == 0 (GQA)."""
+    b, h, sq, d = q.shape
+    kh = k.shape[1]
+    rep = h // kh
+    kq = jnp.repeat(k, rep, axis=1)
+    vq = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    sk = k.shape[2]
+    qi = jnp.arange(sq)
+    ki = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= ki[None, :] <= qi[:, None]
+    if window is not None:
+        mask &= ki[None, :] > qi[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vq)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int):
+    """Chunked SSD oracle (the model's own jnp implementation).
+    x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n)."""
+    y, state = _ssd_chunked(x, dt, A, B, C, chunk)
+    return y, state
+
+
+def rglru_ref(x, r, i, lam):
+    """Associative-scan RG-LRU oracle. x,r,i: (b,s,w); lam: (w,)."""
+    return _rglru_assoc(x, r, i, lam)

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) the corresponding step function is
+``jax.jit(...).lower(**ShapeDtypeStructs).compile()``-ed on the production
+mesh — 16x16 single-pod AND 2x16x16 multi-pod — with NO array allocation.
+Compiled artifacts yield ``memory_analysis()`` (fits-per-device proof) and
+``cost_analysis()`` + HLO collective parsing (the §Roofline inputs).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k [--multi-pod] [--all] [--json out.json]
+
+NOTE: the two os.environ lines above MUST run before any jax import —
+jax locks the device count at first init.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+from repro.launch.hloparse import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   collective_bytes)
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.kernels.policy import set_policy
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import INPUT_SHAPES, input_specs, shape_applicable
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.rules import (batch_specs, decode_state_specs,
+                                  param_specs, to_named)
+from repro.train.steps import (build_decode_step, build_prefill_step,
+                               build_train_step)
+
+
+
+def build_step_and_args(cfg, shape_name, mesh, num_microbatches=8):
+    kind, specs = input_specs(cfg, shape_name)
+    pspecs = to_named(param_specs(specs["params"], cfg, mesh), mesh)
+    bspecs = to_named(batch_specs(specs["batch"], mesh), mesh)
+    if kind == "train":
+        shape = INPUT_SHAPES[shape_name]
+        n_mb = min(num_microbatches, shape.global_batch)
+        step = build_train_step(cfg, AdamWConfig(), num_microbatches=n_mb)
+        ospecs = {"m": pspecs, "v": pspecs,
+                  "count": to_named(jax.tree.map(lambda _: None,
+                                                 jnp.zeros(())), mesh)}
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ospecs["count"] = NamedSharding(mesh, P())
+        jitted = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs),
+                         out_shardings=(pspecs, ospecs, None))
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+    elif kind == "prefill":
+        step = build_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(pspecs, bspecs))
+        args = (specs["params"], specs["batch"])
+    else:
+        step = build_decode_step(cfg)
+        from repro.sharding.rules import serve_mode_fits
+        if serve_mode_fits(specs["params"], specs["state"], mesh):
+            pspecs = to_named(param_specs(specs["params"], cfg, mesh,
+                                          mode="serve"), mesh)
+        sspecs = to_named(decode_state_specs(specs["state"], cfg, mesh), mesh)
+        jitted = jax.jit(step, in_shardings=(pspecs, sspecs, bspecs),
+                         out_shardings=(None, sspecs))
+        args = (specs["params"], specs["state"], specs["batch"])
+    return jitted, args
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True) -> dict:
+    set_policy("ref")   # dry-run lowers the XLA path (Mosaic targets TPU)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        jitted, args = build_step_and_args(cfg, shape_name, mesh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # memory_analysis is per-device
+        "bytes_per_device": {
+            "arguments": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "outputs": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temps": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                        getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        # cost_analysis is the per-device partitioned program
+        "per_device": {"flops": flops, "hbm_bytes": bytes_hbm,
+                       "collective_bytes": coll_total,
+                       "collectives": coll},
+        "roofline_seconds": {
+            "compute": flops / PEAK_FLOPS,
+            "memory": bytes_hbm / HBM_BW,
+            "collective": coll_total / ICI_BW,
+        },
+    }
+    terms = result["roofline_seconds"]
+    result["bottleneck"] = max(terms, key=terms.get)
+    if verbose:
+        print(f"[{arch} x {shape_name} @ {result['mesh']}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory/device: args "
+              f"{result['bytes_per_device']['arguments'] / 2**30:.2f} GiB, "
+              f"temps {result['bytes_per_device']['temps'] / 2**30:.2f} GiB")
+        print(f"  per-device flops {flops:.3e}, hbm {bytes_hbm:.3e} B, "
+              f"collectives {coll_total:.3e} B {coll}")
+        print(f"  roofline terms (s): "
+              + ", ".join(f"{k}={v * 1e3:.2f}ms" for k, v in terms.items())
+              + f" -> bottleneck: {result['bottleneck']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--json", default=None, help="append results to file")
+    args = ap.parse_args()
+
+    assigned = [a for a in ARCHS if not a.startswith("llama")]
+    combos = []
+    if args.all:
+        for a in assigned:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        combos = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in combos:
+        try:
+            results.append(dryrun_one(arch, shape,
+                                      multi_pod=args.multi_pod))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"[{arch} x {shape}] FAILED: {type(e).__name__}: {e}")
+            results.append({"arch": arch, "shape": shape,
+                            "error": f"{type(e).__name__}: {e}"})
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    failed = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(failed)}/{len(results)} combinations OK")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Methodology (verified in tests/test_dryrun.py): XLA's
+``compiled.cost_analysis()`` counts ``while`` bodies ONCE — scan trip
+counts are NOT multiplied in.  A full train step is nested scans
+(microbatches x layer stack), so raw full-step numbers undercount by the
+trip counts.  We therefore lower each REPEATED COMPONENT separately on
+the production mesh:
+
+  layer:<kind>   one transformer block, fwd (+bwd with remat for train)
+  encoder_layer  (enc-dec archs)
+  embed_head     embedding lookup + final norm + LM head + loss
+  optimizer      AdamW update over the full parameter pytree
+
+and combine:  total = sum(component_cost x exact trip count).
+
+Every component is a real ``jit(...).lower().compile()`` on the
+production mesh — same sharding rules as the full step — so FLOPs, HBM
+bytes and the collective mix come from the partitioned per-device HLO,
+not an analytic model.  MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) is
+reported alongside as the "useful compute" yardstick.
+"""
+
+import functools
+import json
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.kernels.policy import set_policy
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import INPUT_SHAPES, shape_applicable
+from repro.models.config import ModelConfig
+from repro.models.model import (_empty_cache_block, apply_block, init_block,
+                                layer_groups)
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+from repro.sharding.rules import param_specs, to_named
+from repro.launch.hloparse import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   collective_bytes)
+
+SDS = jax.ShapeDtypeStruct
+N_MICRO = 8
+
+
+def _cost(compiled):
+    c = compiled.cost_analysis()
+    return {
+        "flops": float(c.get("flops", 0.0)),
+        "hbm_bytes": float(c.get("bytes accessed", 0.0)),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def _slice_group(tree):
+    return jax.tree.map(lambda a: SDS(a.shape[1:], a.dtype), tree)
+
+
+def _group_specs(cfg, mesh, gname, params_struct, mode="train"):
+    full = param_specs(params_struct, cfg, mesh, mode=mode)
+    sliced = jax.tree.map(lambda s: P(*tuple(s)[1:]),
+                          full["groups"][gname],
+                          is_leaf=lambda x: isinstance(x, P))
+    return to_named(sliced, mesh)
+
+
+def _bdims(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def layer_component(cfg: ModelConfig, kind: str, gname: str, mesh,
+                    batch: int, seq: int, mode: str, params_struct,
+                    serve_mode: str = "train"):
+    """Lower one block (fwd/fwd+bwd/decode) and return its cost dict."""
+    d = cfg.d_model
+    bd = _bdims(mesh)
+    import numpy as np
+    nb = int(np.prod([mesh.shape[a] for a in bd]))
+    bspec = bd if batch % nb == 0 else None
+    x = SDS((batch, seq, d), jnp.bfloat16)
+    xs = NamedSharding(mesh, P(bspec, None, None))
+    lp_struct = _slice_group(params_struct["groups"][gname])
+    lp_specs = _group_specs(cfg, mesh, gname, params_struct,
+                            mode=serve_mode)
+    pos = SDS((batch, seq), jnp.int32)
+    pos_s = NamedSharding(mesh, P(bspec, None))
+    ctx_extra = {}
+    args = [lp_struct, x, pos]
+    shardings = [lp_specs, xs, pos_s]
+    if cfg.encdec and kind == "dec":
+        eo = SDS((batch, cfg.encdec.n_frames, d), jnp.bfloat16)
+        args.append(eo)
+        shardings.append(NamedSharding(mesh, P(bspec, None, None)))
+
+    if mode == "train":
+        def f(lp, x, pos, *rest):
+            ctx = {"positions": pos, "causal": True}
+            if rest:
+                ctx["enc_out"] = rest[0]
+
+            def inner(lp, x):
+                y, _, aux = apply_block(lp, x, cfg, kind, ctx)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+
+            return jax.value_and_grad(
+                jax.checkpoint(inner, prevent_cse=False),
+                argnums=(0, 1))(lp, x)
+    elif mode == "prefill":
+        def f(lp, x, pos, *rest):
+            ctx = {"positions": pos, "causal": True}
+            if rest:
+                ctx["enc_out"] = rest[0]
+            y, _, _ = apply_block(lp, x, cfg, kind, ctx)
+            return y
+    else:  # decode
+        cache = jax.eval_shape(
+            functools.partial(_empty_cache_block, cfg, kind, batch, seq,
+                              jnp.bfloat16))
+        from repro.sharding.rules import decode_state_specs
+        cspecs = to_named(decode_state_specs(cache, cfg, mesh), mesh)
+        x1 = SDS((batch, 1, d), jnp.bfloat16)
+        pos1 = SDS((batch, 1), jnp.int32)
+        args = [lp_struct, x1, pos1, cache]
+        shardings = [lp_specs, NamedSharding(mesh, P(bspec, None, None)),
+                     NamedSharding(mesh, P(bspec, None)), cspecs]
+        if cfg.encdec and kind == "dec":
+            eo = SDS((batch, cfg.encdec.n_frames, d), jnp.bfloat16)
+            args.append(eo)
+            shardings.append(NamedSharding(mesh, P(bspec, None, None)))
+
+        def f(lp, x, pos, cache, *rest):
+            ctx = {"positions": pos, "causal": True}
+            if rest:
+                ctx["enc_out"] = rest[0]
+            y, nc, _ = apply_block(lp, x, cfg, kind, ctx, cache=cache)
+            return y, nc
+
+    with mesh:
+        compiled = jax.jit(f, in_shardings=tuple(shardings)) \
+            .lower(*args).compile()
+    return _cost(compiled)
+
+
+def head_component(cfg: ModelConfig, mesh, batch: int, seq: int, mode: str,
+                   params_struct, serve_mode: str = "train"):
+    """Embedding lookup + final norm + head (+ loss & bwd for train)."""
+    bd = _bdims(mesh)
+    import numpy as np
+    nb = int(np.prod([mesh.shape[a] for a in bd]))
+    bspec = bd if batch % nb == 0 else None
+    d = cfg.d_model
+    # decode AND prefill heads touch only the sampled position (§Perf it.8)
+    s = seq if mode == "train" else 1
+    x = SDS((batch, s, d), jnp.bfloat16)
+    xs = NamedSharding(mesh, P(bspec, None, None))
+    keys = [k for k in ("embed", "lm_head", "final_norm")
+            if k in params_struct]
+    sub_struct = {k: params_struct[k] for k in keys}
+    sub_specs = to_named({k: param_specs(params_struct, cfg, mesh,
+                                         mode=serve_mode)[k]
+                          for k in keys}, mesh)
+    from repro.models.model import _norm_apply
+    napp = _norm_apply(cfg)
+
+    if mode == "train" and cfg.input_kind == "tokens":
+        tokens = SDS((batch, s), jnp.int32)
+        labels = SDS((batch, s), jnp.int32)
+        ts = NamedSharding(mesh, P(bspec, None))
+
+        def f(pp, tokens, h, labels):
+            x = jnp.take(pp["embed"], tokens, axis=0) + h
+            x = napp(pp["final_norm"], x, cfg.norm_eps)
+            head = pp["lm_head"] if "lm_head" in pp else pp["embed"].T
+            logits = x @ head
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(logp, labels[..., None], -1)
+            return jnp.mean(nll)
+
+        g = jax.value_and_grad(f, argnums=(0, 2))
+        with mesh:
+            compiled = jax.jit(g, in_shardings=(sub_specs, ts, xs, ts)) \
+                .lower(sub_struct, tokens, x, labels).compile()
+    else:
+        def f(pp, h):
+            x = napp(pp["final_norm"], h, cfg.norm_eps)
+            head = pp["lm_head"] if "lm_head" in pp else pp["embed"].T
+            return x @ head
+
+        with mesh:
+            compiled = jax.jit(f, in_shardings=(sub_specs, xs)) \
+                .lower(sub_struct, x).compile()
+    return _cost(compiled)
+
+
+def optimizer_component(cfg: ModelConfig, mesh, params_struct):
+    pspecs = to_named(param_specs(params_struct, cfg, mesh), mesh)
+    opt_struct = jax.eval_shape(init_opt_state, params_struct)
+    ospecs = {"m": pspecs, "v": pspecs,
+              "count": NamedSharding(mesh, P())}
+
+    def f(p, g, o):
+        return apply_updates(p, g, o, AdamWConfig())
+
+    with mesh:
+        compiled = jax.jit(f, in_shardings=(pspecs, pspecs, ospecs)) \
+            .lower(params_struct, params_struct, opt_struct).compile()
+    return _cost(compiled)
+
+
+def roofline(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    set_policy("ref")
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.launch.specs import param_structs
+    params_struct = param_structs(cfg)
+
+    mode = shape.kind
+    if mode == "train":
+        mb = shape.global_batch // N_MICRO
+        mult_layers = N_MICRO
+        seq = shape.seq_len
+    elif mode == "prefill":
+        mb, mult_layers, seq = shape.global_batch, 1, shape.seq_len
+    else:
+        mb, mult_layers, seq = shape.global_batch, 1, shape.seq_len
+
+    serve_mode = "train"
+    if mode == "decode":
+        from repro.launch.specs import decode_state_structs
+        from repro.sharding.rules import serve_mode_fits
+        state_struct = decode_state_structs(cfg, shape)
+        if serve_mode_fits(params_struct, state_struct, mesh):
+            serve_mode = "serve"
+
+    components = []
+    for gi, (kind, count) in enumerate(layer_groups(cfg)):
+        gname = f"g{gi}_{kind}"
+        c = layer_component(cfg, kind, gname, mesh, mb, seq, mode,
+                            params_struct, serve_mode=serve_mode)
+        components.append((f"layer:{kind}", count * mult_layers, c))
+    if cfg.encdec and mode != "decode":
+        c = layer_component(cfg, "enc", "encoder", mesh, mb,
+                            cfg.encdec.n_frames,
+                            "prefill" if mode != "train" else "train",
+                            {"groups": {"encoder": params_struct["encoder"]}})
+        components.append(("encoder_layer",
+                           cfg.encdec.n_enc_layers * mult_layers, c))
+    c = head_component(cfg, mesh, mb, seq, mode, params_struct,
+                       serve_mode=serve_mode)
+    components.append(("embed_head", mult_layers, c))
+    if mode == "train":
+        components.append(("optimizer", 1,
+                           optimizer_component(cfg, mesh, params_struct)))
+
+    flops = sum(m * c["flops"] for _, m, c in components)
+    hbm = sum(m * c["hbm_bytes"] for _, m, c in components)
+    coll_by_kind: dict[str, float] = {}
+    for _, m, c in components:
+        for k, v in c["collectives"].items():
+            coll_by_kind[k] = coll_by_kind.get(k, 0.0) + m * v
+    coll = sum(coll_by_kind.values())
+
+    tokens = shape.global_batch * (shape.seq_len if mode == "train" else
+                                   (shape.seq_len if mode == "prefill" else 1))
+    n_active = cfg.param_count(active_only=True)
+    model_flops = 6 * n_active * tokens if mode == "train" \
+        else 2 * n_active * tokens
+    chips = mesh.devices.size
+
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": coll / ICI_BW,
+    }
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "per_device": {"flops": flops, "hbm_bytes": hbm,
+                       "collective_bytes": coll,
+                       "collectives": coll_by_kind},
+        "roofline_seconds": terms,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": model_flops / (flops * chips)
+        if flops else 0.0,
+        "components": [
+            {"name": n, "mult": m, **c} for n, m, c in components],
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} @ {result['mesh']}] "
+              + ", ".join(f"{k}={v * 1e3:.2f}ms" for k, v in terms.items())
+              + f" -> {result['bottleneck']}"
+              + f" | useful-flops ratio {result['useful_flops_ratio']:.2f}")
+    return result
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    from repro.configs import ARCHS
+    combos = ([(a, s) for a in ARCHS if not a.startswith("llama")
+               for s in INPUT_SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    for arch, shape in combos:
+        try:
+            r = roofline(arch, shape, multi_pod=args.multi_pod)
+        except Exception as e:  # noqa: BLE001
+            print(f"[{arch} x {shape}] FAILED: {type(e).__name__}: {e}")
+            r = {"arch": arch, "shape": shape,
+                 "error": f"{type(e).__name__}: {e}"}
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

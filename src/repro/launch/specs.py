@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape).
+
+``input_specs`` builds weak-type-correct, shardable stand-ins for every
+model input — batches, parameters, optimizer state, decode caches — with
+NO device allocation (everything flows through ``jax.eval_shape``).
+
+The four assigned input shapes:
+
+  train_4k      seq 4,096    global_batch 256   (training)
+  prefill_32k   seq 32,768   global_batch 32    (inference prefill)
+  decode_32k    seq 32,768   global_batch 128   (one-token decode w/ cache)
+  long_500k     seq 524,288  global_batch 1     (long-context decode;
+                                                 sub-quadratic archs only)
+
+For [vlm] the batch carries precomputed patch/text embeddings + M-RoPE
+positions; for [audio] it carries decoder tokens + 1500 stub frame
+embeddings (DESIGN.md carve-out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_decode_state, init_params
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention architecture: long_500k requires "
+                       "sub-quadratic decode (skip noted in DESIGN.md)")
+    return True, ""
+
+
+def batch_specs_for(cfg: ModelConfig, shape: InputShape,
+                    dtype=jnp.bfloat16) -> dict:
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    batch: dict = {}
+    if cfg.input_kind == "embeds":
+        batch["embeds"] = S((b, s, cfg.d_model), dtype)
+        batch["positions3"] = S((3, b, s), jnp.int32)
+    elif cfg.input_kind == "audio":
+        batch["tokens"] = S((b, s), jnp.int32)
+        if shape.kind != "decode":
+            batch["audio_embeds"] = S((b, cfg.encdec.n_frames, cfg.d_model),
+                                      dtype)
+    else:
+        batch["tokens"] = S((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = S((b, s), jnp.int32)
+        batch["loss_mask"] = S((b, s), jnp.float32)
+    return batch
+
+
+def param_structs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0))
+
+
+def opt_structs(params_struct):
+    from repro.optim.adamw import init_opt_state
+    return jax.eval_shape(init_opt_state, params_struct)
+
+
+def decode_state_structs(cfg: ModelConfig, shape: InputShape,
+                         dtype=jnp.bfloat16):
+    enc_out = None
+    if cfg.encdec:
+        enc_out = S((shape.global_batch, cfg.encdec.n_frames, cfg.d_model),
+                    dtype)
+
+    def mk():
+        eo = (jnp.zeros(enc_out.shape, enc_out.dtype)
+              if enc_out is not None else None)
+        return init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                 dtype, enc_out=eo)
+
+    return jax.eval_shape(mk)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, dtype=jnp.bfloat16):
+    """Returns (kind, dict of ShapeDtypeStruct pytrees) for the step fn."""
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name}: {why}")
+    out = {"batch": batch_specs_for(cfg, shape, dtype),
+           "params": param_structs(cfg, dtype)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_structs(out["params"])
+    if shape.kind == "decode":
+        out["state"] = decode_state_structs(cfg, shape, dtype)
+    return shape.kind, out

@@ -1,0 +1,419 @@
+"""Unified model: one composable stack covering all assigned families.
+
+Layers are grouped into homogeneous *groups* (dense blocks, MoE blocks,
+Mamba2 blocks, Griffin superblocks, encoder/decoder stacks).  Each group's
+parameters are stacked along a leading layer axis (init via ``jax.vmap``)
+and executed with ``jax.lax.scan`` + optional ``jax.checkpoint`` — keeping
+the lowered HLO compact enough that 512-way GSPMD partitioning of a
+95-layer model compiles in seconds.
+
+Public entry points:
+  init_params(key, cfg, dtype)
+  forward(params, batch, cfg)                 -> (logits, aux)
+  loss_fn(params, batch, cfg)                 -> (loss, metrics)
+  init_decode_state(cfg, batch, max_len, dtype)
+  decode_step(params, state, batch, cfg)      -> (logits, state)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (_init, apply_attention, apply_mla, apply_mlp,
+                     init_attention, init_layernorm, init_mla, init_mlp,
+                     init_rmsnorm, layer_norm, rms_norm)
+from .moe import apply_moe, init_moe
+from .rglru import apply_recurrent_block, init_recurrent_block
+from .ssm import apply_mamba2, init_mamba2
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# layer groups
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """(block_kind, count) sequence describing the decoder stack."""
+    if cfg.family == "ssm":
+        return [("mamba", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        n_super, tail = divmod(cfg.n_layers, len(pat))
+        groups: list[tuple[str, int]] = [("griffin", n_super)]
+        if tail:
+            groups.append(("griffin_tail", 1))  # tail = pattern[:tail]
+        return groups
+    if cfg.moe:
+        nd = cfg.moe.n_dense_layers
+        out = []
+        if nd:
+            out.append(("dense", nd))
+        out.append(("moe", cfg.n_layers - nd))
+        return out
+    if cfg.encdec:
+        return [("dec", cfg.n_layers)]
+    return [("dense", cfg.n_layers)]
+
+
+def _norm_init(cfg):
+    return init_layernorm if cfg.family == "audio" else init_rmsnorm
+
+
+def _norm_apply(cfg):
+    return layer_norm if cfg.family == "audio" else rms_norm
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype):
+    d = cfg.d_model
+    ninit = _norm_init(cfg)
+    ks = jax.random.split(key, 8)
+    if kind == "mamba":
+        return {"n1": ninit(d, dtype), "mixer": init_mamba2(ks[0], cfg, dtype)}
+    if kind in ("griffin", "griffin_tail"):
+        pat = cfg.hybrid.pattern
+        if kind == "griffin_tail":
+            tail = cfg.n_layers % len(pat)
+            pat = pat[:tail]
+        subs = []
+        for j, p in enumerate(pat):
+            kk = jax.random.split(ks[j], 4)
+            if p == "rec":
+                mixer = init_recurrent_block(kk[0], cfg, dtype)
+            else:
+                mixer = init_attention(kk[0], cfg, dtype)
+            subs.append({"n1": ninit(d, dtype), "mixer": mixer,
+                         "n2": ninit(d, dtype),
+                         "mlp": init_mlp(kk[1], d, cfg.d_ff, cfg.mlp, dtype)})
+        return {"subs": subs}
+    if kind == "moe":
+        attn = (init_mla(ks[0], cfg, dtype) if cfg.mla
+                else init_attention(ks[0], cfg, dtype))
+        return {"n1": ninit(d, dtype), "attn": attn,
+                "n2": ninit(d, dtype), "moe": init_moe(ks[1], cfg, dtype)}
+    if kind == "dense":
+        attn = (init_mla(ks[0], cfg, dtype) if cfg.mla
+                else init_attention(ks[0], cfg, dtype))
+        ff = (cfg.moe.dense_d_ff if (cfg.moe and cfg.moe.dense_d_ff)
+              else cfg.d_ff)
+        return {"n1": ninit(d, dtype), "attn": attn,
+                "n2": ninit(d, dtype),
+                "mlp": init_mlp(ks[1], d, ff, cfg.mlp, dtype)}
+    if kind == "enc":
+        return {"n1": ninit(d, dtype),
+                "attn": init_attention(ks[0], cfg, dtype),
+                "n2": ninit(d, dtype),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, "gelu", dtype)}
+    if kind == "dec":
+        return {"n1": ninit(d, dtype),
+                "attn": init_attention(ks[0], cfg, dtype),
+                "nx": ninit(d, dtype),
+                "xattn": init_attention(ks[1], cfg, dtype, cross=True),
+                "n2": ninit(d, dtype),
+                "mlp": init_mlp(ks[2], d, cfg.d_ff, "gelu", dtype)}
+    raise ValueError(kind)
+
+
+def apply_block(p, x, cfg: ModelConfig, kind: str, ctx: dict,
+                cache=None):
+    """Returns (y, new_cache, aux)."""
+    napp = _norm_apply(cfg)
+    aux = jnp.float32(0.0)
+    eps = cfg.norm_eps
+
+    def attn_call(ap, h, *, window=None, cross=False, c=None):
+        if cfg.mla and not cross:
+            return apply_mla(ap, h, cfg, positions=ctx.get("positions"),
+                             cache=c)
+        return apply_attention(
+            ap, h, cfg, positions=ctx.get("positions"),
+            positions3=ctx.get("positions3"),
+            causal=False if cross else ctx.get("causal", True),
+            window=window,
+            cache=c, kv_src=ctx.get("enc_out") if cross else None,
+            use_rope=not cross and cfg.family != "audio")
+
+    if kind == "mamba":
+        y, nc = apply_mamba2(p["mixer"], napp(p["n1"], x, eps), cfg, cache)
+        return x + y, nc, aux
+
+    if kind in ("griffin", "griffin_tail"):
+        pat = cfg.hybrid.pattern
+        if kind == "griffin_tail":
+            pat = pat[: cfg.n_layers % len(pat)]
+        new_caches = []
+        for j, kindj in enumerate(pat):
+            sp = p["subs"][j]
+            cj = cache[j] if cache is not None else None
+            h = napp(sp["n1"], x, eps)
+            if kindj == "rec":
+                y, nc = apply_recurrent_block(sp["mixer"], h, cfg, cj)
+            else:
+                y, nc = attn_call(sp["mixer"], h,
+                                  window=cfg.hybrid.window, c=cj)
+            x = x + y
+            x = x + apply_mlp(sp["mlp"], napp(sp["n2"], x, eps), cfg.mlp)
+            new_caches.append(nc)
+        return x, (new_caches if cache is not None else None), aux
+
+    if kind in ("dense", "moe"):
+        from repro.sharding.hints import seq_shard_residual
+        y, nc = attn_call(p["attn"], napp(p["n1"], x, eps), c=cache)
+        x = seq_shard_residual(x + y)
+        h = napp(p["n2"], x, eps)
+        if kind == "moe":
+            y2, aux = apply_moe(p["moe"], h, cfg)
+        else:
+            y2 = apply_mlp(p["mlp"], h, cfg.mlp)
+        return seq_shard_residual(x + y2), nc, aux
+
+    if kind == "enc":
+        ctx_enc = dict(ctx, causal=False)
+        y, _ = apply_attention(p["attn"], napp(p["n1"], x, eps), cfg,
+                               causal=False, use_rope=False)
+        x = x + y
+        return x + apply_mlp(p["mlp"], napp(p["n2"], x, eps), "gelu"), None, aux
+
+    if kind == "dec":
+        c_self = cache["self"] if cache is not None else None
+        y, nc = attn_call(p["attn"], napp(p["n1"], x, eps), c=c_self)
+        x = x + y
+        yx, _ = attn_call(p["xattn"], napp(p["nx"], x, eps), cross=True)
+        x = x + yx
+        x = x + apply_mlp(p["mlp"], napp(p["n2"], x, eps), "gelu")
+        return x, ({"self": nc} if nc is not None else None), aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    params: dict = {}
+    if cfg.input_kind == "tokens" or cfg.encdec:
+        params["embed"] = _init(ks[0], (cfg.vocab, cfg.d_model), dtype)
+    params["groups"] = {}
+    for gi, (kind, count) in enumerate(layer_groups(cfg)):
+        gkeys = jax.random.split(ks[1 + (gi % 4)], count)
+        params["groups"][f"g{gi}_{kind}"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind, dtype))(gkeys)
+    if cfg.encdec:
+        ekeys = jax.random.split(ks[5], cfg.encdec.n_enc_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_block(k, cfg, "enc", dtype))(ekeys)
+        params["enc_norm"] = _norm_init(cfg)(cfg.d_model, dtype)
+    params["final_norm"] = _norm_init(cfg)(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(ks[6], (cfg.d_model, cfg.vocab), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions, d, dtype):
+    """Sinusoidal position embedding (stand-in for Whisper's learned table;
+    the conv frontend is already a stub per DESIGN.md)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig, pos=None):
+    if cfg.input_kind == "embeds":
+        return batch["embeds"]
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "audio":
+        b, s = tokens.shape
+        if pos is None:
+            p = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        else:
+            p = jnp.broadcast_to(pos[None, None], (b, s))
+        x = x + _sinusoid(p, cfg.d_model, x.dtype)
+    return x
+
+
+def _run_encoder(params, batch, cfg: ModelConfig, remat: bool = False):
+    h = batch["audio_embeds"]
+    b, f = h.shape[:2]
+    h = h + _sinusoid(jnp.broadcast_to(jnp.arange(f)[None], (b, f)),
+                      cfg.d_model, h.dtype)
+
+    def enc_step(x, lp):
+        y, _, _ = apply_block(lp, x, cfg, "enc", {})
+        return y, None
+
+    if remat:  # §Perf it. 9: un-remat'd encoder dominated whisper train temps
+        enc_step = jax.checkpoint(enc_step, prevent_cse=False)
+    h, _ = jax.lax.scan(enc_step, h, params["encoder"])
+    return _norm_apply(cfg)(params["enc_norm"], h, cfg.norm_eps)
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = False,
+            last_only: bool = False):
+    """Full-sequence forward -> (logits, aux_loss).  ``last_only``
+    computes the LM head on the final position only (prefill serving:
+    the (B, S, vocab) logits tensor at 32K x 152K vocab is ~20 GiB per
+    device otherwise — §Perf iteration 8)."""
+    from repro.sharding.hints import batch_axes, hint
+    x = _embed_inputs(params, batch, cfg)
+    x = hint(x, batch_axes())
+    b, s = x.shape[:2]
+    ctx = {
+        "positions": batch.get("positions",
+                               jnp.broadcast_to(jnp.arange(s)[None], (b, s))),
+        "positions3": batch.get("positions3"),
+        "causal": True,
+    }
+    if cfg.encdec:
+        ctx["enc_out"] = _run_encoder(params, batch, cfg, remat=remat)
+
+    aux_total = jnp.float32(0.0)
+    for gname, gparams in params["groups"].items():
+        kind = gname.split("_", 1)[1]
+
+        def blk(x, lp, kind=kind):
+            y, _, aux = apply_block(lp, x, cfg, kind, ctx)
+            return y, aux
+
+        if remat:
+            blk = jax.checkpoint(blk, prevent_cse=False)
+
+        x, auxs = jax.lax.scan(blk, x, gparams)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = _norm_apply(cfg)(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    from repro.sharding.hints import batch_axes, hint
+    logits = hint(logits, batch_axes(), None, "model")
+    return logits, aux_total
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: bool = False):
+    logits, aux = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    # cross-entropy without materializing a full fp32 log-softmax:
+    # logsumexp (fp32 accumulate) + picked-logit gather
+    from repro.sharding.hints import batch_axes as _ba, hint as _hint
+    logits32 = _hint(logits.astype(jnp.float32), _ba(), None, "model")
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    picked = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _empty_cache_block(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                       dtype):
+    d = cfg.d_model
+    if kind == "mamba":
+        s = cfg.ssm
+        din = s.d_inner(d)
+        return {
+            "conv": jnp.zeros((batch, s.d_conv - 1, din + 2 * s.d_state), dtype),
+            "state": jnp.zeros((batch, s.n_heads(d), s.head_dim, s.d_state),
+                               jnp.float32),
+        }
+    if kind in ("griffin", "griffin_tail"):
+        pat = cfg.hybrid.pattern
+        if kind == "griffin_tail":
+            pat = pat[: cfg.n_layers % len(pat)]
+        w = cfg.hybrid.lru_width or d
+        out = []
+        for p in pat:
+            if p == "rec":
+                out.append({"conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, w), dtype),
+                            "h": jnp.zeros((batch, w), jnp.float32)})
+            else:
+                wlen = min(cfg.hybrid.window, max_len)
+                out.append({"k": jnp.zeros((batch, wlen, cfg.n_kv_heads, cfg.hd), dtype),
+                            "v": jnp.zeros((batch, wlen, cfg.n_kv_heads, cfg.hd), dtype),
+                            "idx": jnp.int32(0)})
+        return out
+    if cfg.mla:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+                "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+                "idx": jnp.int32(0)}
+    kv = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+          "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+          "idx": jnp.int32(0)}
+    if kind == "dec":
+        return {"self": kv}
+    return kv
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.float32, enc_out=None) -> dict:
+    """Stacked per-group caches (leading layer axis) + step counter."""
+    caches = {}
+    for gname_kind, count in zip(
+            [f"g{i}_{k}" for i, (k, _) in enumerate(layer_groups(cfg))],
+            [c for _, c in layer_groups(cfg)]):
+        kind = gname_kind.split("_", 1)[1]
+        one = _empty_cache_block(cfg, kind, batch, max_len, dtype)
+        caches[gname_kind] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape).copy()
+            if isinstance(a, jnp.ndarray) else a,
+            one, is_leaf=lambda a: isinstance(a, jnp.ndarray))
+    state = {"caches": caches, "pos": jnp.int32(0)}
+    if enc_out is not None:
+        state["enc_out"] = enc_out
+    return state
+
+
+def decode_step(params, state, batch, cfg: ModelConfig):
+    """One-token decode.  batch: {tokens: (B,1)} (or embeds).  Returns
+    (logits (B,1,V), new_state)."""
+    pos = state["pos"]
+    x = _embed_inputs(params, batch, cfg, pos=pos)
+    b = x.shape[0]
+    ctx = {
+        "positions": jnp.broadcast_to(pos[None, None], (b, 1)),
+        "positions3": batch.get("positions3"),
+        "causal": True,
+    }
+    if "enc_out" in state:
+        ctx["enc_out"] = state["enc_out"]
+
+    new_caches = {}
+    for gname, gparams in params["groups"].items():
+        kind = gname.split("_", 1)[1]
+        cache = state["caches"][gname]
+
+        def blk(x, inp, kind=kind):
+            lp, c = inp
+            y, nc, _ = apply_block(lp, x, cfg, kind, ctx, cache=c)
+            return y, nc
+
+        x, nc = jax.lax.scan(blk, x, (gparams, cache))
+        new_caches[gname] = nc
+
+    x = _norm_apply(cfg)(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    return logits, {**state, "caches": new_caches, "pos": pos + 1}

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin [arXiv:2402.19427]).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+(log-depth, shardable over batch/width); decode carries ``h``.  The Pallas
+kernel in kernels/rglru_scan.py implements the same scan with VMEM tiling.
+
+The recurrent block wraps the RG-LRU Griffin-style: two input branches
+(gate via GeLU, signal via causal conv + RG-LRU), merged multiplicatively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _init
+
+_C = 8.0
+
+
+def rglru_scan(x, r, i, lam):
+    """Associative-scan RG-LRU.  x, r, i: (b, s, w); lam: (w,)."""
+    log_a = -_C * jax.nn.softplus(lam) * r.astype(jnp.float32)   # (b,s,w)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_decode_step(x, r, i, lam, h_prev):
+    """One-step recurrence: x,r,i: (b,1,w); h_prev: (b,w)."""
+    log_a = -_C * jax.nn.softplus(lam) * r[:, 0].astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i[:, 0] * x[:, 0]).astype(jnp.float32)
+    h = a * h_prev + b_t
+    return h[:, None].astype(x.dtype), h
+
+
+def init_recurrent_block(key, cfg: ModelConfig, dtype):
+    h = cfg.hybrid
+    d = cfg.d_model
+    w = h.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": _init(ks[0], (d, w), dtype),
+        "in_gate": _init(ks[1], (d, w), dtype),
+        "conv_w": _init(ks[2], (h.conv_width, w), dtype, scale=0.1),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_r": _init(ks[3], (w, w), dtype),
+        "gate_i": _init(ks[4], (w, w), dtype),
+        "lam": jnp.full((w,), 1.0, jnp.float32),
+        "out": _init(ks[5], (w, d), dtype),
+    }
+
+
+def apply_recurrent_block(p, x, cfg: ModelConfig, cache=None):
+    """Griffin recurrent branch. cache: {conv, h}."""
+    from .ssm import _causal_conv
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    sig = x @ p["in_x"]
+    conv_state = cache["conv"] if cache else None
+    sig, new_conv = _causal_conv(sig, p["conv_w"], p["conv_b"], conv_state)
+    r = jax.nn.sigmoid(sig @ p["gate_r"])
+    i = jax.nn.sigmoid(sig @ p["gate_i"])
+    if cache is not None:
+        y, new_h = rglru_decode_step(sig, r, i, p["lam"], cache["h"])
+        new_cache = {"conv": new_conv, "h": new_h}
+    else:
+        from repro.kernels.policy import use_pallas
+        if use_pallas() and sig.shape[1] % 128 == 0 \
+                and sig.shape[2] % 128 == 0:
+            from repro.kernels.rglru_scan import rglru_pallas
+            y = rglru_pallas(sig, r, i, p["lam"],
+                             interpret=jax.default_backend() != "tpu")
+        else:
+            y = rglru_scan(sig, r, i, p["lam"])
+        new_cache = None
+    return (y * gate) @ p["out"], new_cache

@@ -1,0 +1,182 @@
+"""Mamba2 — state-space duality (SSD) block [arXiv:2405.21060].
+
+Reference implementation of the chunked SSD algorithm in pure jnp
+(the Pallas TPU kernel in kernels/ssd_scan.py computes the same math with
+VMEM tiling; kernels/ref.py re-exports :func:`ssd_chunked` as its oracle).
+
+The block follows the Mamba2 architecture: in_proj -> (z gate | x, B, C,
+dt heads) -> short conv on (x,B,C) -> SSD scan -> gated RMSNorm -> out_proj.
+Decode carries (conv_state, ssm_state) — O(1) per token, which is what
+makes ``long_500k`` decode feasible for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _init, init_rmsnorm, rms_norm
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   head inputs
+    dt: (b, s, h)      softplus-activated step sizes
+    A:  (h,)           negative decay rates
+    B:  (b, s, n)      input projection (shared across heads, 1 group)
+    C:  (b, s, n)      output projection
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk:
+        # pad to a chunk multiple: dt=0 padding is a no-op on the state
+        # (decay exp(0)=1, input contribution dt*x = 0)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        y, st = ssd_chunked(x, dt, A, B, C, chunk, initial_state)
+        return y[:, :s], st
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    # per-step log decay: a_t = exp(dt_t * A)  (A < 0)
+    la = dtc * A[None, None, None, :]              # (b,nc,q,h) log decay
+    cum = jnp.cumsum(la, axis=2)                   # within-chunk cumsum
+    total = cum[:, :, -1]                          # (b,nc,h)
+
+    xbar = xc * dtc[..., None]                     # dt-weighted inputs
+
+    # intra-chunk (quadratic within chunk): L[i,j] = exp(cum_i - cum_j), i>=j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,q,q,h)
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    # scores[i,j] = C_i . B_j
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)         # (b,nc,q,q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         scores, L, xbar)
+
+    # chunk-level states: S_c = sum_j exp(total - cum_j) B_j x_j^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)     # (b,nc,q,h)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xbar)
+
+    # inter-chunk recurrence over c: S = S_prev * exp(total_c) + S_chunk_c
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+
+    def step(S_prev, inp):
+        S_c, tot_c = inp                                    # (b,h,p,n),(b,h)
+        S_new = S_prev * jnp.exp(tot_c)[:, :, None, None] + S_c
+        return S_new, S_prev
+
+    tot_t = jnp.moveaxis(total, 1, 0)                       # (nc,b,h)
+    S_t = jnp.moveaxis(S_chunk, 1, 0)                       # (nc,b,h,p,n)
+    final_state, S_prevs = jax.lax.scan(step, initial_state, (S_t, tot_t))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                   # (b,nc,h,p,n)
+
+    # contribution of carried state within each chunk
+    decay_in = jnp.exp(cum)                                 # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_in, S_prevs)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token SSD update: state' = state * exp(dt A) + B (dt x)^T;
+    y = C . state'.   x:(b,1,h,p) dt:(b,1,h) B,C:(b,1,n)."""
+    a = jnp.exp(dt[..., None, None] * A[None, None, :, None, None])[:, 0]
+    xbar = (x * dt[..., None])[:, 0]                        # (b,h,p)
+    upd = jnp.einsum("bn,bhp->bhpn", B[:, 0], xbar)
+    state = state * a + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0], state)
+    return y[:, None].astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    ks = jax.random.split(key, 6)
+    conv_ch = din + 2 * s.d_state
+    return {
+        "in_proj": _init(ks[0], (d, 2 * din + 2 * s.d_state + nh), dtype),
+        "conv_w": _init(ks[1], (s.d_conv, conv_ch), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(A_log)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), dtype),
+        "norm": init_rmsnorm(din, dtype),
+        "out_proj": _init(ks[2], (din, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d. x: (b,s,c); w: (k,c); state: (b,k-1,c)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out + b, new_state
+
+
+def apply_mamba2(p, x, cfg: ModelConfig, cache=None):
+    """x: (b,s,d). cache: {conv, state} for decode."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    din = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    b, s, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + s_cfg.d_state,
+                 2 * din + 2 * s_cfg.d_state], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [din, din + s_cfg.d_state], axis=-1)
+
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+
+    if cache is not None:
+        y, new_state = ssd_decode_step(xh, dt, A, Bc, Cc, cache["state"])
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        from repro.kernels.policy import use_pallas
+        if use_pallas() and s % s_cfg.chunk == 0:
+            from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+            y, final_state = _ssd_pallas(
+                xh, dt, A, Bc, Cc, chunk=s_cfg.chunk,
+                interpret=jax.default_backend() != "tpu")
+        else:
+            y, final_state = ssd_chunked(xh, dt, A, Bc, Cc, s_cfg.chunk)
+        new_cache = None
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], new_cache

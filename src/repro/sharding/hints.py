@@ -1,0 +1,80 @@
+"""In-model sharding hints (``with_sharding_constraint`` helpers).
+
+GSPMD propagates shardings well through matmuls but poorly through the
+scatter/gather MoE dispatch and the fused loss; these helpers pin the
+few intermediates that otherwise balloon per-device memory.  They no-op
+when no mesh context is active (smoke tests, single device) or when the
+requested axes don't exist / don't divide, so model code can call them
+unconditionally.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # noqa: BLE001 — any jax-internal change: just no-op
+        return None
+
+
+def batch_axes() -> tuple[str, ...] | None:
+    m = _active_mesh()
+    if m is None:
+        return None
+    return tuple(a for a in ("pod", "data") if a in m.axis_names) or None
+
+
+def hint(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) if the ambient mesh has the
+    named axes and every sharded dim divides; otherwise identity."""
+    m = _active_mesh()
+    if m is None:
+        return x
+    fixed = []
+    for dim, axis in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if axis is None:
+            fixed.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        if not all(a in m.axis_names for a in axes):
+            fixed.append(None)
+            continue
+        n = int(np.prod([m.shape[a] for a in axes]))
+        fixed.append(axis if dim % n == 0 else None)
+    if all(a is None for a in fixed):
+        return x
+    import jax
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def hint_tokens(x):
+    """Shard a (tokens, ...) tensor's leading dim over the batch axes."""
+    bd = batch_axes()
+    return hint(x, bd) if bd else x
+
+
+# --- sequence-parallel residual stream (Megatron-SP analogue) -------------
+_SEQ_SHARD = False
+
+
+def set_seq_shard(on: bool) -> None:
+    """Shard the residual stream's sequence dim over the ``model`` axis
+    between blocks (norms/elementwise run on S/TP shards; GSPMD turns the
+    TP output all-reduces into reduce-scatter + all-gather pairs)."""
+    global _SEQ_SHARD
+    _SEQ_SHARD = on
+
+
+def seq_shard_residual(x):
+    if not _SEQ_SHARD or x.ndim != 3:
+        return x
+    bd = batch_axes()
+    if bd is None:
+        return x
+    return hint(x, bd, "model", None)

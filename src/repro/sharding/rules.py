@@ -1,0 +1,251 @@
+"""Annotation -> jax sharding compilation + per-arch parameter rules.
+
+Two layers:
+
+1. ``annot_to_spec`` — the bridge from a (homogeneous, HSize=1) HSPMD
+   annotation to a ``PartitionSpec``.  Heterogeneous annotations (HSize>1)
+   compile to one spec per sharding subgroup on that subgroup's sub-mesh —
+   used by the specialization layer; the production pjit path below covers
+   the symmetric case exactly as classical SPMD is the HSize=1 degenerate
+   form of HSPMD.
+
+2. ``param_specs`` / ``batch_specs`` / ``decode_state_specs`` — rule-based
+   PartitionSpec trees for the production mesh:
+     - weights: FSDP over ``data`` x TP over ``model`` (replicated over
+       ``pod``; gradients AR over pod = cross-pipeline DP sync),
+     - MoE experts: EP over ``model`` when n_experts divides, else TP
+       inside each expert,
+     - activations/caches: batch over (pod, data), heads/latent over
+       ``model`` (GQA head counts below the TP degree shard with GSPMD
+       padding — documented trade-off, visible in the roofline),
+     - non-divisible dims fall back to replication.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.annotations import DUP, PARTIAL, HSPMD
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# HSPMD annotation -> PartitionSpec (HSize == 1)
+# ---------------------------------------------------------------------------
+
+def annot_to_spec(annot: HSPMD, axis_order: tuple[str, ...]) -> P:
+    """Compile a single-subgroup annotation to a PartitionSpec.
+
+    ``axis_order`` names the mesh axes corresponding to the DS entries in
+    order (the device-major decomposition must match the mesh's).
+    Duplicate entries map to unsharded mesh axes; Partial is rejected
+    (inputs/outputs of a jit program cannot be partial-valued).
+    """
+    if annot.hsize != 1:
+        raise ValueError("annot_to_spec expects HSize == 1; specialize "
+                         "heterogeneous annotations per subgroup")
+    ds = annot.dss[0]
+    if ds.has_partial:
+        raise ValueError("Partial tensors cannot cross a jit boundary")
+    if len(axis_order) != len(ds.entries):
+        raise ValueError(f"axis_order {axis_order} does not match DS "
+                         f"entries {ds.entries}")
+    ndim = 1 + max((d for d, _ in ds.entries if d >= 0), default=-1)
+    spec: list = [None] * ndim
+    for (d, n), axis in zip(ds.entries, axis_order):
+        if d >= 0:
+            spec[d] = axis
+    return P(*spec)
+
+
+def spec_to_annot(spec: P, mesh: Mesh, shape: tuple[int, ...]) -> HSPMD:
+    """Inverse bridge (for recording deployed strategies as annotations)."""
+    from repro.core.annotations import DG, DS, spmd
+    entries = []
+    used = set()
+    for d, axis in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        entries.append((d, n))
+        used.update(axes)
+    dup = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                       if a not in used]))
+    if dup > 1:
+        entries.append((DUP, dup))
+    return spmd(sorted(d.id for d in np.ravel(mesh.devices)), dict(entries))
+
+
+# ---------------------------------------------------------------------------
+# production parameter rules
+# ---------------------------------------------------------------------------
+
+_2D_COL = re.compile(
+    r"(wq|wk|wv|up|gate|in_proj|in_x|in_gate|gate_r|gate_i|wq_a|wq_b|"
+    r"wkv_a|wkv_b|embed)$")
+_2D_ROW = re.compile(r"(wo|out_proj|out|down|lm_head)$")
+
+
+def _div(size: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return size % n == 0
+
+
+def _maybe(spec_dims, shape, mesh) -> P:
+    """Drop non-divisible axis assignments (replicate those dims)."""
+    fixed = []
+    for dim, axis in zip(shape, spec_dims):
+        fixed.append(axis if _div(dim, mesh, axis) else None)
+    return P(*fixed)
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh, mode: str = "train"):
+    """PartitionSpec pytree for the parameter pytree (works for stacked
+    layer groups: a leading layer axis is always unsharded).
+
+    ``mode="serve"`` switches to the weight-stationary decode layout:
+    weights are NOT sharded over the ``data`` axis (there is no optimizer
+    state and no gradient to justify FSDP; per-step weight all-gathers
+    were the dominant decode collective — §Perf iteration 2).  Use only
+    when bf16 params / TP degree fits HBM alongside the KV cache
+    (``serve_mode_fits`` decides)."""
+    fsdp = None if mode == "serve" else "data"
+    tp = "model"
+
+    def leaf_spec(path: str, leaf) -> P:
+        shape = leaf.shape
+        name = path.rsplit("/", 1)[-1]
+        stacked = path.startswith("groups/")
+        base = shape[1:] if stacked else shape
+        lead = (None,) if stacked else ()
+
+        def out(*dims):
+            return _maybe(lead + dims, shape, mesh)
+
+        if "experts" in path or "shared" in path:
+            # (L, E, d, f) or (L, E, f, d)
+            e = base[0]
+            ep_ok = _div(e, mesh, tp)
+            if name in ("up", "gate"):
+                return out(tp, fsdp, None) if ep_ok else out(None, fsdp, tp)
+            if name == "down":
+                return out(tp, None, fsdp) if ep_ok else out(None, tp, fsdp)
+        if len(base) == 2 and _2D_COL.search(name):
+            return out(fsdp, tp)
+        if len(base) == 2 and _2D_ROW.search(name):
+            return out(tp, fsdp)
+        if name == "router":
+            return out(fsdp, None)
+        if name == "conv_w":
+            return out(None, tp)
+        # norms, biases, scalars: replicated
+        return P(*([None] * len(shape)))
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}{k}/") for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, f"{path}{i}/") for i, v in enumerate(tree)]
+        if isinstance(tree, tuple):
+            return tuple(walk(v, f"{path}{i}/") for i, v in enumerate(tree))
+        return leaf_spec(path[:-1], tree)
+
+    return walk(params)
+
+
+def serve_mode_fits(params_struct, state_struct, mesh: Mesh,
+                    budget_bytes: int = 14 * 2**30) -> bool:
+    """True when bf16 weights / TP + the decode cache shard fit HBM,
+    enabling the weight-stationary serve layout."""
+    import numpy as np
+    tp = mesh.shape.get("model", 1)
+    nchips = int(np.prod(list(mesh.shape.values())))
+    pbytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                 for l in jax.tree.leaves(params_struct))
+    sbytes = sum(int(np.prod(l.shape)) * getattr(l.dtype, "itemsize", 4)
+                 for l in jax.tree.leaves(state_struct))
+    return pbytes / tp + sbytes / nchips < budget_bytes
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Batch dim over (pod, data) when divisible; everything else local."""
+    bdims = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def leaf(x):
+        shape = x.shape
+        if len(shape) == 0:
+            return P()
+        if len(shape) == 3 and shape[0] == 3:   # positions3 (3, B, S)
+            return _maybe((None, bdims, None), shape, mesh)
+        spec = [None] * len(shape)
+        spec[0] = bdims
+        return _maybe(tuple(spec), shape, mesh)
+
+    return jax.tree.map(leaf, batch)
+
+
+def decode_state_specs(state, cfg: ModelConfig, mesh: Mesh):
+    """KV caches: batch over (pod, data); head/latent dims over model.
+
+    GQA caches with n_kv_heads < TP degree use GSPMD padded sharding on
+    the heads dim (documented; roofline shows the cost).  SSM / RG-LRU
+    states shard their width dims over model.
+    """
+    bdims = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = "model"
+
+    def leaf(path, x):
+        shape = x.shape
+        name = path.rsplit("/", 1)[-1]
+        if len(shape) == 0:
+            return P()
+        stacked = path.startswith("caches/")
+        # layer-stacked caches: (L, B, ...)
+        lead = (None,) if stacked else ()
+        base = shape[1:] if stacked else shape
+        if name in ("k", "v") and len(base) == 4:
+            # (B, S, K, hd): batch over (pod,data), cache SEQUENCE over
+            # model (GQA head counts are usually below the TP degree and
+            # pjit requires divisibility; sequence-sharding the cache is
+            # also the better decode layout: the big score tensor stays
+            # sharded and only softmax stats + the (B,H,1,hd) output
+            # reduce across the axis)
+            return _maybe(lead + (bdims, tp, None, None), shape, mesh)
+        if name == "c_kv":
+            return _maybe(lead + (bdims, tp, None), shape, mesh)
+        if name == "k_rope":
+            return _maybe(lead + (bdims, tp, None), shape, mesh)
+        if name == "state" and len(base) == 4:
+            # SSM state (B, h, p, n): heads over model
+            return _maybe(lead + (bdims, tp, None, None), shape, mesh)
+        if name in ("conv", "h"):
+            spec = lead + (bdims,) + (None,) * (len(base) - 2) + (tp,)
+            return _maybe(spec, shape, mesh)
+        if name == "enc_out":
+            return _maybe((bdims, None, tp), shape, mesh)
+        spec = lead + (bdims,) + (None,) * (len(base) - 1)
+        return _maybe(spec, shape, mesh)
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}{k}/") for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, f"{path}{i}/") for i, v in enumerate(tree)]
+        if isinstance(tree, tuple):
+            return tuple(walk(v, f"{path}{i}/") for i, v in enumerate(tree))
+        return leaf(path[:-1], tree)
+
+    return walk(state)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

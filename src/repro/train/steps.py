@@ -1,0 +1,85 @@
+"""Train / prefill / decode step builders (the functions the launcher jits).
+
+``build_train_step``: gradient-accumulation scan over microbatches (the
+global batch is reshaped to (n_micro, micro, ...) inside the step so the
+dry-run's input specs stay (global_batch, seq)), remat inside the layer
+scan, fp32 grad accumulation, AdamW update.
+
+``build_prefill_step`` / ``build_decode_step``: the serving pair — prefill
+lowers a full forward over the context; decode consumes ONE token with the
+KV/SSM/window cache as carried state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, forward, loss_fn
+from repro.optim.adamw import AdamWConfig, apply_updates
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     num_microbatches: int = 1, remat: bool = True):
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            def resh(x):
+                if x.ndim >= 2 and x.shape[0] == 3:   # positions3 (3, B, S)
+                    y = x.reshape((3, num_microbatches, -1) + x.shape[2:])
+                    return jnp.moveaxis(y, 0, 1)
+                if x.ndim >= 1 and x.shape[0] % num_microbatches == 0:
+                    return x.reshape((num_microbatches, -1) + x.shape[1:])
+                return x
+            mbs = jax.tree.map(resh, batch)
+
+            def mb_step(acc, mb):
+                from repro.sharding.hints import batch_axes, hint
+                bd = batch_axes()
+                if bd:
+                    # re-pin batch sharding lost by the (G,) -> (n,mb)
+                    # reshape across the scan boundary
+                    mb = jax.tree.map(
+                        lambda a: hint(a, None, bd)
+                        if a.ndim >= 2 and a.shape[0] == 3 else hint(a, bd),
+                        mb)
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb, cfg, remat=remat)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(mb_step, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(losses)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg, remat=remat)
+        new_params, new_opt, om = apply_updates(params, grads, opt_state,
+                                                opt_cfg)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        # head computed on the last position only (what a server samples
+        # from) — the full (B, 32K, vocab) logits would be ~20 GiB/device
+        logits, _ = forward(params, batch, cfg, last_only=True)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def serve_step(params, state, batch):
+        logits, new_state = decode_step(params, state, batch, cfg)
+        return logits[:, -1, :], new_state
+
+    return serve_step

@@ -1,0 +1,93 @@
+"""Unit tests for HSPMD annotation algebra (paper §3, Figs 2-3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.annotations import DG, DS, DUP, HSPMD, PARTIAL, replicated, spmd
+
+
+def test_ds_canonical_form():
+    ds = DS({0: 2, 1: 1, DUP: 4})
+    assert ds.get(0) == 2
+    assert ds.get(1) == 1  # trivial entries dropped
+    assert ds.get(DUP) == 4
+    assert ds.num_devices == 8
+
+
+def test_ds_coords_row_major():
+    ds = DS([(0, 2), (DUP, 2)])  # dim0 slow, dup fast
+    assert ds.coords(0) == {0: 0, DUP: 0}
+    assert ds.coords(1) == {0: 0, DUP: 1}
+    assert ds.coords(2) == {0: 1, DUP: 0}
+    assert ds.coords(3) == {0: 1, DUP: 1}
+
+
+def test_ds_local_box():
+    ds = DS([(0, 2), (1, 2)])
+    assert ds.local_box(0, (8, 4)) == ((0, 4), (0, 2))
+    assert ds.local_box(3, (8, 4)) == ((4, 8), (2, 4))
+
+
+def test_ds_positions_varying_groups():
+    ds = DS([(0, 2), (PARTIAL, 2)])
+    groups = ds.positions_varying(PARTIAL)
+    assert sorted(map(tuple, groups)) == [(0, 1), (2, 3)]
+
+
+def test_dg_validation():
+    with pytest.raises(ValueError):
+        DG([0, 0, 1])
+
+
+def test_hspmd_basic_figure2_left():
+    # paper Fig 2 left: X split dim0 over {0,1}x{2,3} dup, W split dim1
+    x = spmd([0, 1, 2, 3], DS([(0, 2), (DUP, 2)]))
+    w = spmd([0, 1, 2, 3], DS([(DUP, 2), (1, 2)]))
+    assert x.hsize == 1 and x.hdim == DUP
+    assert x.device_box(3, (8, 16)) == ((4, 8), (0, 16))
+    assert w.device_box(1, (16, 32)) == ((0, 16), (16, 32))
+
+
+def test_hspmd_union_figure3():
+    # two subgroups with different internal sharding, hdim=0 split
+    a = HSPMD(
+        dgs=[[0, 3], [5, 6], [2, 4], [1]],
+        dss=[DS({1: 2}), DS({1: 2}), DS({0: 2}), DS({})],
+        hdim=0,
+    )
+    assert a.hsize == 4
+    shape = (8, 4)
+    # subgroup slabs: rows 0-2, 2-4, 4-6, 6-8
+    assert a.device_box(0, shape) == ((0, 2), (0, 2))
+    assert a.device_box(3, shape) == ((0, 2), (2, 4))
+    assert a.device_box(5, shape) == ((2, 4), (0, 2))
+    assert a.device_box(2, shape) == ((4, 5), (0, 4))
+    assert a.device_box(4, shape) == ((5, 6), (0, 4))
+    assert a.device_box(1, shape) == ((6, 8), (0, 4))
+
+
+def test_hspmd_nonuniform_hsplits():
+    a = HSPMD(dgs=[[0, 1], [2]], dss=[DS({0: 2}), DS({})], hdim=0,
+              hsplits=[3, 1])
+    shape = (16, 4)
+    assert a.device_box(0, shape) == ((0, 6), (0, 4))
+    assert a.device_box(1, shape) == ((6, 12), (0, 4))
+    assert a.device_box(2, shape) == ((12, 16), (0, 4))
+
+
+def test_hspmd_disjoint_subgroups_enforced():
+    with pytest.raises(ValueError):
+        HSPMD(dgs=[[0, 1], [1, 2]], dss=[DS({0: 2}), DS({0: 2})], hdim=0)
+
+
+def test_partial_degree():
+    a = HSPMD(dgs=[[0, 1], [2, 3]],
+              dss=[DS({PARTIAL: 2}), DS({PARTIAL: 2})], hdim=PARTIAL)
+    assert a.partial_degree(0) == 4
+    b = replicated([0, 1])
+    assert b.partial_degree(0) == 1
+
+
+def test_single_group_hdim_canonicalized():
+    a = HSPMD(dgs=[[0, 1]], dss=[DS({0: 2})], hdim=0)
+    assert a.hdim == DUP

@@ -1,0 +1,263 @@
+"""Tests for hierarchical communication resolution (paper §4, Figs 4-7).
+
+Every case is validated numerically on the virtual-device simulator:
+scatter by src annotation -> apply plan -> shards must equal the dst
+decomposition of the same global value.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.annotations import DS, DUP, HSPMD, PARTIAL, replicated, spmd
+from repro.core.comm_resolve import UnsupportedCommError, resolve
+from repro.core.simulator import apply_plan, gather, roundtrip_check, scatter
+
+RNG = np.random.default_rng(42)
+
+
+def _check(src, dst, shape, expect_kind=None):
+    plan = resolve(src, dst, shape)
+    if expect_kind is not None:
+        assert plan.kind == expect_kind, f"{plan.kind} != {expect_kind}"
+    value = RNG.normal(size=shape)
+    roundtrip_check(value, src, dst, plan, rng=np.random.default_rng(1))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# bottom tier (§4.1, Fig 5)
+# ---------------------------------------------------------------------------
+
+def test_identity():
+    a = spmd([0, 1], DS({0: 2}))
+    plan = _check(a, a, (8, 4), "identity")
+    assert plan.nbytes_moved() == 0
+
+
+def test_send_recv_dg_change():
+    src = spmd([0, 1], DS({0: 2}))
+    dst = spmd([2, 3], DS({0: 2}))
+    plan = _check(src, dst, (8, 4), "bottom:SR")
+    assert plan.message_count() == 2
+
+
+def test_allreduce_partial_to_dup():
+    src = spmd([0, 1], DS({PARTIAL: 2}))
+    dst = spmd([0, 1], DS({DUP: 2}))
+    _check(src, dst, (8, 4), "bottom:AR")
+
+
+def test_reduce_scatter_partial_to_split():
+    src = spmd([0, 1], DS({PARTIAL: 2}))
+    dst = spmd([0, 1], DS({0: 2}))
+    _check(src, dst, (8, 4), "bottom:RS")
+
+
+def test_allgather_split_to_dup():
+    src = spmd([0, 1], DS({0: 2}))
+    dst = spmd([0, 1], DS({DUP: 2}))
+    _check(src, dst, (8, 4), "bottom:AG")
+
+
+def test_allgather_dim1():
+    src = spmd([0, 1, 2, 3], DS([(0, 2), (1, 2)]))
+    dst = spmd([0, 1, 2, 3], DS([(0, 2), (DUP, 2)]))
+    _check(src, dst, (8, 8), "bottom:AG")
+
+
+def test_ar_with_coexisting_split():
+    # Partial:2 x Split0:2 -> Dup:2 x Split0:2  (AR inside split groups)
+    src = spmd([0, 1, 2, 3], DS([(0, 2), (PARTIAL, 2)]))
+    dst = spmd([0, 1, 2, 3], DS([(0, 2), (DUP, 2)]))
+    _check(src, dst, (8, 4), "bottom:AR")
+
+
+def test_bottom_resharding_bsr():
+    # split dim0 -> split dim1: no collective fits, BSR fallback
+    src = spmd([0, 1], DS({0: 2}))
+    dst = spmd([0, 1], DS({1: 2}))
+    plan = _check(src, dst, (8, 8), "bottom:BSR")
+    assert plan.nbytes_moved() > 0
+
+
+def test_bottom_bsr_dg_and_ds_change():
+    src = spmd([0, 1], DS({0: 2}))
+    dst = spmd([2, 3], DS({1: 2}))
+    _check(src, dst, (8, 8), "bottom:BSR")
+
+
+def test_rs_with_coexisting_split():
+    # Partial:2 x Split0:2 -> Split1:2 x Split0:2 is a valid RS (Fig 5)
+    src = spmd([0, 1, 2, 3], DS([(PARTIAL, 2), (0, 2)]))
+    dst = spmd([0, 1, 2, 3], DS([(1, 2), (0, 2)]))
+    _check(src, dst, (8, 8), "bottom:RS")
+
+
+def test_partial_bsr_unsupported():
+    # Partial shards + DG *and* DS change: not collective-expressible,
+    # and BSR cannot carry Partial (paper §4.3 Discussions)
+    src = spmd([0, 1], DS({PARTIAL: 2}))
+    dst = spmd([2, 3], DS({0: 2}))
+    with pytest.raises(UnsupportedCommError):
+        resolve(src, dst, (8, 8))
+
+
+def test_sr_moves_partial_shards():
+    # DS unchanged (still Partial) but DG changes: SR moves summands
+    src = spmd([0, 1], DS({PARTIAL: 2}))
+    dst = spmd([2, 3], DS({PARTIAL: 2}))
+    plan = resolve(src, dst, (4, 4))
+    assert plan.kind == "bottom:SR"
+    value = RNG.normal(size=(4, 4))
+    st = scatter(value, src, rng=np.random.default_rng(3))
+    out = apply_plan(st, plan)
+    np.testing.assert_allclose(gather(out), value, atol=1e-6)
+
+
+def test_heterogeneous_bottom_mix():
+    # two subgroups, one needs AR and one needs AG -> separate parallel steps
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({PARTIAL: 2}), DS({0: 2})], hdim=0)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({DUP: 2}), DS({DUP: 2})], hdim=0)
+    plan = _check(src, dst, (8, 4), "bottom:AG+AR")
+    assert {s.kind for s in plan.steps} == {"AR", "AG"}
+
+
+# ---------------------------------------------------------------------------
+# top tier (§4.2, Figs 6-7)
+# ---------------------------------------------------------------------------
+
+def test_split_allreduce():
+    # hdim Partial -> Dup across two subgroups (the hetero-DP gradient sync)
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({0: 2}), DS({0: 2})], hdim=PARTIAL)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({0: 2}), DS({0: 2})], hdim=DUP)
+    plan = _check(src, dst, (8, 4), "top:SplitAR")
+    assert plan.steps[0].kind == "SplitAR"
+
+
+def test_split_allreduce_asymmetric_subgroups():
+    # subgroups of different size/sharding still sync correctly
+    src = HSPMD(dgs=[[0, 1, 2, 3], [4, 5]],
+                dss=[DS([(0, 2), (1, 2)]), DS({0: 2})], hdim=PARTIAL)
+    dst = HSPMD(dgs=[[0, 1, 2, 3], [4, 5]],
+                dss=[DS([(0, 2), (1, 2)]), DS({0: 2})], hdim=DUP)
+    _check(src, dst, (8, 8), "top:SplitAR")
+
+
+def test_split_reduce_scatter():
+    # hdim Partial -> Split(0): each subgroup keeps its slab of the sum
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({1: 2}), DS({1: 2})], hdim=PARTIAL)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({1: 2}), DS({1: 2})], hdim=0)
+    _check(src, dst, (8, 8), "top:SplitRS")
+
+
+def test_split_allgather():
+    # hdim Split(0) -> Dup: every subgroup reconstructs the full tensor
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({1: 2}), DS({1: 2})], hdim=0)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({1: 2}), DS({1: 2})], hdim=DUP)
+    _check(src, dst, (8, 8), "top:SplitAG")
+
+
+def test_split_allgather_bottom_splits_same_dim():
+    # bottom tier splits the SAME dim as hdim — the geometry-hard case
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({0: 2}), DS({0: 2})], hdim=0)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({0: 2}), DS({0: 2})], hdim=DUP)
+    _check(src, dst, (8, 4), "top:SplitAG")
+
+
+def test_top_slice_dup_to_split():
+    # hdim Dup -> Split: pure local slab extraction, zero bytes
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({1: 2}), DS({1: 2})], hdim=DUP)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({1: 2}), DS({1: 2})], hdim=0)
+    plan = _check(src, dst, (8, 8), "top:Slice")
+    assert plan.nbytes_moved() == 0
+
+
+def test_fig7_composition_bottom_then_top():
+    # paper Fig 7: DS Union differs AND hdim differs -> RS (bottom) then SplitAR
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({PARTIAL: 2}), DS({0: 2})], hdim=PARTIAL)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({0: 2}), DS({0: 2})], hdim=DUP)
+    plan = _check(src, dst, (8, 4))
+    kinds = [s.kind for s in plan.steps]
+    assert kinds == ["RS", "SplitAR"], kinds
+
+
+def test_hsplits_rebalance_bsr():
+    # same hdim, different non-uniform hsplits -> runtime rebalancing via BSR
+    src = HSPMD(dgs=[[0, 1], [2]], dss=[DS({0: 2}), DS({})], hdim=0,
+                hsplits=[2, 2])
+    dst = HSPMD(dgs=[[0, 1], [2]], dss=[DS({0: 2}), DS({})], hdim=0,
+                hsplits=[3, 1])
+    plan = _check(src, dst, (16, 4))
+    assert "BSR" in plan.kind or any(s.kind == "BSR" for s in plan.steps)
+
+
+def test_cross_union_bsr_fallback():
+    # different DG unions and HSize -> global BSR (Fig 8 regime)
+    src = HSPMD(dgs=[[0, 1, 2, 3]], dss=[DS({0: 4})])
+    dst = HSPMD(dgs=[[4, 5], [6]], dss=[DS({1: 2}), DS({})], hdim=0)
+    plan = _check(src, dst, (8, 8), "fallback:BSR")
+    assert plan.steps[0].kind == "BSR"
+
+
+def test_cross_union_partial_unsupported():
+    src = HSPMD(dgs=[[0, 1]], dss=[DS({PARTIAL: 2})])
+    dst = HSPMD(dgs=[[2], [3]], dss=[DS({}), DS({})], hdim=0)
+    with pytest.raises(UnsupportedCommError):
+        resolve(src, dst, (8, 4))
+
+
+def test_grow_subgroup_devices():
+    # elastic scale-up: 2 devices -> 4 devices, resharded
+    src = spmd([0, 1], DS({0: 2}))
+    dst = spmd([0, 1, 2, 3], DS([(0, 2), (1, 2)]))
+    _check(src, dst, (8, 8))
+
+
+def test_shrink_subgroup_devices():
+    # elastic failure: drop device 3, redistribute over 3 devices
+    src = spmd([0, 1, 2, 3], DS({0: 4}))
+    dst = spmd([0, 1, 2], DS({0: 3}))
+    _check(src, dst, (12, 4))
+
+
+def test_splitar_spectator_bottom_partial():
+    # top-tier partial reduces across subgroups while bottom-tier Partial
+    # survives (ZeRO-style): bottom summands must not be mixed
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({PARTIAL: 2}), DS({PARTIAL: 2})], hdim=PARTIAL)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({PARTIAL: 2}), DS({PARTIAL: 2})], hdim=DUP)
+    plan = resolve(src, dst, (8, 4))
+    assert plan.kind == "top:SplitAR"
+    value = RNG.normal(size=(8, 4))
+    st = scatter(value, src, rng=np.random.default_rng(9))
+    out = apply_plan(st, plan)
+    np.testing.assert_allclose(gather(out), value, atol=1e-6)
+
+
+def test_splitag_spectator_bottom_partial():
+    # hdim split -> dup while bottom Partial persists: gather per summand
+    src = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({PARTIAL: 2}), DS({PARTIAL: 2})], hdim=0)
+    dst = HSPMD(dgs=[[0, 1], [2, 3]],
+                dss=[DS({PARTIAL: 2}), DS({PARTIAL: 2})], hdim=DUP)
+    plan = resolve(src, dst, (8, 4))
+    assert plan.kind == "top:SplitAG"
+    value = RNG.normal(size=(8, 4))
+    st = scatter(value, src, rng=np.random.default_rng(10))
+    out = apply_plan(st, plan)
+    np.testing.assert_allclose(gather(out), value, atol=1e-6)

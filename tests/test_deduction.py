@@ -1,0 +1,184 @@
+"""Annotation deduction tests (paper §5.2, Figs 10-11)."""
+
+import pytest
+
+from repro.core.annotations import DS, DUP, HSPMD, PARTIAL, spmd
+from repro.core.graph import (DeductionError, Graph, convert_hsize,
+                              unify_inputs)
+
+
+def test_fig2_left_spmd_deduction():
+    """Paper Fig 2 (left): DP x TP dot — Y inherits X's batch split and W's
+    column split; the contraction is unsharded."""
+    g = Graph()
+    x = g.placeholder("X", (8, 16, 32),
+                      [spmd([0, 1, 2, 3], DS([(0, 2), (DUP, 2)]))])
+    w = g.parameter("W", (32, 64),
+                    [spmd([0, 1, 2, 3], DS([(DUP, 2), (1, 2)]))])
+    y = g.dot(x, w)
+    g.deduce()
+    ys = y.annot.dss[0]
+    assert ys.get(0) == 2          # batch split passes through
+    assert ys.get(2) == 2          # W's n-split becomes last dim
+    assert ys.get(PARTIAL) == 1
+    assert ys.num_devices == 4
+
+
+def test_fig11_contraction_split_becomes_partial():
+    """Fig 11: X split on contraction dim c, W split on dim 0 by c -> Partial."""
+    g = Graph()
+    x = g.placeholder("X", (4, 8, 32), [spmd([0, 1], DS({2: 2}))])
+    w = g.parameter("W", (32, 16), [spmd([0, 1], DS({0: 2}))])
+    y = g.dot(x, w)
+    g.deduce()
+    assert y.annot.dss[0].get(PARTIAL) == 2
+
+
+def test_fig11_full_table():
+    """The complete 3Dx2D Dot rule of Fig 11: X split (a,b,c), W split (c,d)
+    -> Y gets (a, b, d) splits, partial c, dup n/(abcd)."""
+    a, b, c, d = 2, 2, 2, 2
+    n = a * b * c * d * 2  # dup 2
+    devs = list(range(n))
+    g = Graph()
+    x = g.placeholder("X", (8, 8, 8),
+                      [spmd(devs, DS([(0, a), (1, b), (2, c), (DUP, n // (a * b * c))]))])
+    w = g.parameter("W", (8, 8),
+                    [spmd(devs, DS([(0, c), (1, d), (DUP, n // (c * d))]))])
+    y = g.dot(x, w)
+    g.deduce()
+    ys = y.annot.dss[0]
+    assert ys.get(0) == a and ys.get(1) == b and ys.get(2) == d
+    assert ys.get(PARTIAL) == c
+    assert ys.get(DUP) == n // (a * b * c * d)
+
+
+def test_contraction_mismatch_needs_commop():
+    g = Graph()
+    x = g.placeholder("X", (4, 8, 32), [spmd([0, 1], DS({2: 2}))])
+    w = g.parameter("W", (32, 16), [spmd([0, 1], DS({1: 2}))])
+    g.dot(x, w)
+    with pytest.raises(DeductionError):
+        g.deduce()
+
+
+def test_unary_propagates():
+    g = Graph()
+    x = g.placeholder("X", (4, 8), [spmd([0, 1], DS({0: 2}))])
+    y = g.gelu(x)
+    g.deduce()
+    assert y.annot == x.annot
+
+
+def test_sum_split_dim_becomes_partial():
+    g = Graph()
+    x = g.placeholder("X", (4, 8), [spmd([0, 1], DS({1: 2}))])
+    y = g.sum(x, dim=1)
+    g.deduce()
+    assert y.annot.dss[0].get(PARTIAL) == 2
+
+
+def test_sum_renumbers_later_dims():
+    g = Graph()
+    x = g.placeholder("X", (4, 8, 6), [spmd([0, 1], DS({2: 2}))])
+    y = g.sum(x, dim=0)
+    g.deduce()
+    assert y.annot.dss[0].get(1) == 2
+
+
+# ---------------------------------------------------------------------------
+# HSize / DG Union conversion (Fig 10)
+# ---------------------------------------------------------------------------
+
+def test_convert_hsize_preserves_placement():
+    a = spmd([0, 1, 2, 3], DS([(0, 4)]))
+    b = convert_hsize(a, 2)
+    assert b.hsize == 2 and b.hdim == 0
+    shape = (16, 8)
+    for dev in range(4):
+        assert a.device_box(dev, shape) == b.device_box(dev, shape)
+
+
+def test_convert_hsize_dup_outer():
+    a = spmd([0, 1, 2, 3], DS([(DUP, 2), (0, 2)]))
+    b = convert_hsize(a, 2)
+    assert b.hsize == 2 and b.hdim == DUP
+    shape = (8, 8)
+    for dev in range(4):
+        assert a.device_box(dev, shape) == b.device_box(dev, shape)
+
+
+def test_unify_inputs_alignment_required():
+    hetero = HSPMD(dgs=[[0, 1], [2, 3]], dss=[DS({0: 2}), DS({1: 2})], hdim=0)
+    flat = spmd([0, 2, 1, 3], DS([(0, 4)]))  # devices interleaved: misaligned
+    with pytest.raises(DeductionError):
+        unify_inputs([hetero, flat])
+
+
+def test_hetero_dot_deduction_fig2_right():
+    """Paper Fig 2 (right): heterogeneous DP where subgroups use different
+    internal parallelism; Dot deduction runs per subgroup."""
+    devs = [[0, 3], [5, 6], [2, 4], [1]]
+    x = HSPMD(dgs=devs, dss=[DS({DUP: 2}), DS({DUP: 2}), DS({0: 2}), DS({})],
+              hdim=0)
+    w = HSPMD(dgs=devs, dss=[DS({1: 2}), DS({1: 2}), DS({DUP: 2}), DS({})],
+              hdim=DUP)
+    g = Graph()
+    xt = g.placeholder("X", (8, 16, 32), [x])
+    wt = g.parameter("W", (32, 64), [w])
+    y = g.dot(xt, wt)
+    g.deduce()
+    ya = y.annot
+    assert ya.hdim == 0            # hetero batch split survives the Dot
+    assert ya.dss[0].get(2) == 2   # TP subgroups: output col-split
+    assert ya.dss[2].get(0) == 2   # CP-ish subgroup keeps its row split
+    assert ya.dss[3].num_devices == 1
+
+
+def test_multi_annotation_synchronous_deduction():
+    """§6.1: two strategies deduced synchronously through one graph."""
+    s1 = spmd([0, 1], DS({0: 2}))
+    s2 = spmd([0, 1], DS({DUP: 2}))
+    g = Graph()
+    x = g.placeholder("X", (4, 8, 8), [s1, s2])
+    w = g.parameter("W", (8, 8), [spmd([0, 1], DS({DUP: 2}))])  # broadcast to both
+    y = g.dot(x, w)
+    g.deduce()
+    assert y.n_strategies == 2
+    assert y.annots[0].dss[0].get(0) == 2
+    assert y.annots[1].dss[0].get(DUP) == 2
+
+
+def test_transpose_moves_split_dims():
+    g = Graph()
+    x = g.placeholder("X", (4, 8, 16), [spmd([0, 1], DS({1: 2}))])
+    y = g.transpose(x, (2, 0, 1))
+    g.deduce()
+    assert y.annot.dss[0].get(2) == 2  # old dim1 -> new dim2
+
+
+def test_transpose_hdim_follows():
+    a = HSPMD(dgs=[[0], [1]], dss=[DS({}), DS({})], hdim=1)
+    g = Graph()
+    x = g.placeholder("X", (4, 8), [a])
+    y = g.transpose(x, (1, 0))
+    g.deduce()
+    assert y.annot.hdim == 0
+
+
+def test_reshape_preserves_leading_split():
+    g = Graph()
+    x = g.placeholder("X", (8, 4, 16), [spmd([0, 1], DS({0: 2}))])
+    y = g.reshape(x, (8, 64))
+    g.deduce()
+    assert y.annot.dss[0].get(0) == 2
+
+
+def test_reshape_merging_sharded_dim_rejected():
+    g = Graph()
+    # dim1 split; reshape merges dims 0-1: the split dim has no unambiguous
+    # image -> must reshard first
+    x = g.placeholder("X", (4, 8, 16), [spmd([0, 1], DS({1: 2}))])
+    g.reshape(x, (32, 16))
+    with pytest.raises(DeductionError):
+        g.deduce()

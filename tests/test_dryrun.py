@@ -1,0 +1,121 @@
+"""Dry-run infrastructure tests.
+
+The full 40-combo sweeps run via ``python -m repro.launch.dryrun --all``
+(and --multi-pod); results land in dryrun_results.jsonl /
+dryrun_multipod.jsonl.  Here we test the pieces cheaply and run ONE real
+lower+compile in a subprocess (the 512-device env must not leak into this
+process — smoke tests see 1 device per spec)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.specs import (INPUT_SHAPES, batch_specs_for, input_specs,
+                                param_structs, shape_applicable)
+from repro.configs import ARCHS, get_config
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("llama")]
+
+
+def test_cost_analysis_counts_while_bodies_once():
+    """The §Roofline methodology hinges on this XLA behaviour."""
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    single = jax.jit(lambda a, b: a @ b).lower(x, w).compile()
+
+    def scanned(a, b):
+        y, _ = jax.lax.scan(lambda c, _: (c @ b, None), a, None, length=10)
+        return y
+
+    looped = jax.jit(scanned).lower(x, w).compile()
+    f1 = single.cost_analysis()["flops"]
+    f10 = looped.cost_analysis()["flops"]
+    assert f10 < 2 * f1, "XLA started trip-counting: update roofline.py"
+
+
+def test_input_specs_no_allocation():
+    """input_specs must be pure ShapeDtypeStructs (no device arrays)."""
+    for arch in ASSIGNED[:4]:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            if not shape_applicable(cfg, shape)[0]:
+                continue
+            kind, specs = input_specs(cfg, shape.name)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+
+def test_input_shapes_match_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long_500k_gating():
+    """Sub-quadratic archs run long_500k; full-attention archs skip."""
+    runs = {a: shape_applicable(get_config(a), INPUT_SHAPES["long_500k"])[0]
+            for a in ASSIGNED}
+    assert runs["mamba2_370m"] and runs["recurrentgemma_9b"]
+    assert not runs["qwen1_5_110b"] and not runs["deepseek_v2_236b"]
+    assert sum(runs.values()) == 2
+
+
+def test_collective_bytes_parser():
+    from repro.launch.hloparse import collective_bytes
+    hlo = """
+      %ar = bf16[16,512]{1,0} all-reduce(%x), replica_groups={}
+      %ag.1 = f32[4,128]{1,0} all-gather(%y), dimensions={0}
+      %rs = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) reduce-scatter(%a, %b)
+      %cp = u32[2]{0} collective-permute-start(%c)
+      %notacoll = bf16[9,9]{1,0} add(%p, %q)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 16 * 512 * 2
+    assert got["all-gather"] == 4 * 128 * 4
+    assert got["reduce-scatter"] == 2 * 8 * 8 * 2
+    assert got["collective-permute"] == 2 * 4
+    assert set(got) == {"all-reduce", "all-gather", "reduce-scatter",
+                        "collective-permute"}
+
+
+def test_smoke_tests_see_one_device():
+    """The 512-device XLA flag must NOT leak into the test env."""
+    assert len(jax.devices()) < 16
+
+
+@pytest.mark.slow
+def test_real_dryrun_subprocess():
+    """One real (arch x shape) lower+compile on the 16x16 mesh, in a
+    subprocess (where the 512-host-device flag is set by dryrun.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2-1.5b", "--shape", "decode_32k"],
+        capture_output=True, text=True, env=env, timeout=560,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "1/1 combinations OK" in proc.stdout
+
+
+def test_sweep_artifacts_if_present():
+    """When the full sweeps have run, every (arch x shape) must be OK or
+    an explicitly documented skip — on BOTH meshes."""
+    for fname in ("dryrun_results.jsonl", "dryrun_multipod.jsonl"):
+        if not os.path.exists(fname):
+            pytest.skip(f"{fname} not generated yet")
+        rows = [json.loads(l) for l in open(fname)]
+        combos = {(r["arch"], r["shape"]) for r in rows}
+        assert len(combos) == 40, f"{fname}: {len(combos)} combos"
+        errors = [r for r in rows if "error" in r]
+        assert not errors, errors[:2]
+        skips = [r for r in rows if "skipped" in r]
+        assert len(skips) == 8  # 8 full-attention archs x long_500k

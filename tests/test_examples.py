@@ -1,0 +1,63 @@
+"""The runnable examples must stay runnable (subprocess smoke)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    # keep subprocess thread/memory footprint small — under full-suite
+    # load the TSL thread pool can fail to spawn (SIGABRT) otherwise
+    env["OMP_NUM_THREADS"] = "1"
+    env["OPENBLAS_NUM_THREADS"] = "1"
+    env["XLA_FLAGS"] = ""  # never inherit the 512-device flag
+    for attempt in range(2):
+        p = subprocess.run([sys.executable] + args, capture_output=True,
+                           text=True, env=env, timeout=timeout, cwd=ROOT)
+        if p.returncode == 0 or attempt:
+            return p
+    return p
+
+
+@pytest.mark.slow
+def test_quickstart():
+    p = _run(["examples/quickstart.py"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "numerical roundtrip: OK" in p.stdout
+    assert "SplitAR" in p.stdout
+
+
+@pytest.mark.slow
+def test_elastic_example():
+    p = _run(["examples/elastic_training.py"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "no restart" in p.stdout
+    assert "verified exact" in p.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_and_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    p = _run(["-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+              "--reduced", "--steps", "6", "--batch", "4", "--seq", "64",
+              "--microbatches", "1", "--ckpt", ck])
+    assert p.returncode == 0, p.stdout + p.stderr
+    p2 = _run(["-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+               "--reduced", "--steps", "3", "--batch", "4", "--seq", "64",
+               "--microbatches", "1", "--resume", ck])
+    assert p2.returncode == 0, p2.stdout + p2.stderr
+    assert "resumed" in p2.stdout
+
+
+@pytest.mark.slow
+def test_serve_example():
+    p = _run(["examples/serve.py", "--arch", "qwen2-1.5b", "--gen", "8",
+              "--prompt-len", "8"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "decode 8 tokens" in p.stdout

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) for the HSPMD invariants.
+
+The system's core invariant: for ANY pair of valid annotations (src, dst)
+over the same global shape, the resolved communication plan — whatever
+operator mix it chose — must transform the src decomposition into exactly
+the dst decomposition of the same global value.
+"""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.annotations import DS, DUP, HSPMD, PARTIAL, spmd
+from repro.core.comm_resolve import UnsupportedCommError, resolve
+from repro.core.simulator import roundtrip_check
+
+MAX_DEV = 16
+DIMS = 2
+SIZE = 24  # divisible by 1,2,3,4,6,8,12 — plenty of shard factorizations
+
+
+def _factor_pairs(n):
+    return [(a, n // a) for a in range(1, n + 1) if n % a == 0]
+
+
+@st.composite
+def ds_strategy(draw, n_devices: int, allow_partial: bool):
+    """Random DS over exactly n_devices, factored over dims/dup/partial."""
+    kinds = [0, 1, DUP] + ([PARTIAL] if allow_partial else [])
+    # random ordered factorization of n_devices
+    entries = []
+    rem = n_devices
+    dims_avail = list(kinds)
+    while rem > 1 and dims_avail:
+        d = draw(st.sampled_from(dims_avail))
+        dims_avail.remove(d)
+        divisors = [k for k in range(2, rem + 1)
+                    if rem % k == 0 and (d < 0 or SIZE % k == 0)]
+        if not divisors:
+            continue
+        n = draw(st.sampled_from(divisors))
+        entries.append((d, n))
+        rem //= n
+    if rem != 1:
+        # couldn't factor: dump remainder into dup
+        entries.append((DUP, rem * (dict(entries).get(DUP, 1))))
+        entries = [(d, n) for d, n in entries if d != DUP or n > 1]
+        m = {}
+        for d, n in entries:
+            m[d] = m.get(d, 1) * n
+        entries = list(m.items())
+    return DS(entries)
+
+
+@st.composite
+def annot_strategy(draw, devices: tuple[int, ...], allow_partial: bool,
+                   allow_hetero: bool):
+    n = len(devices)
+    hsize = draw(st.sampled_from([1, 2] if (allow_hetero and n % 2 == 0) else [1]))
+    if hsize == 1:
+        ds = draw(ds_strategy(n, allow_partial))
+        return HSPMD([devices], [ds])
+    half = n // 2
+    dgs = [devices[:half], devices[half:]]
+    dss = [draw(ds_strategy(half, allow_partial)) for _ in range(2)]
+    hdim = draw(st.sampled_from([DUP, 0, 1] + ([PARTIAL] if allow_partial else [])))
+    return HSPMD(dgs, dss, hdim=hdim)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(data=st.data())
+def test_resolution_roundtrip_no_partial(data):
+    """Any non-Partial src/dst pair must be resolvable and exact."""
+    n_src = data.draw(st.sampled_from([1, 2, 3, 4, 6, 8]))
+    n_dst = data.draw(st.sampled_from([1, 2, 3, 4, 6, 8]))
+    src_devs = tuple(range(n_src))
+    # dst devices may overlap src or not
+    offset = data.draw(st.sampled_from([0, 2, 8]))
+    dst_devs = tuple(range(offset, offset + n_dst))
+    src = data.draw(annot_strategy(src_devs, False, True))
+    dst = data.draw(annot_strategy(dst_devs, False, True))
+    shape = (SIZE, SIZE)
+    plan = resolve(src, dst, shape)
+    value = np.random.default_rng(0).normal(size=shape)
+    roundtrip_check(value, src, dst, plan, rng=np.random.default_rng(1))
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(data=st.data())
+def test_resolution_roundtrip_partial_src(data):
+    """Partial sources resolve whenever the decision tree admits them;
+    UnsupportedCommError is acceptable only on the paper's stated limits
+    (Partial + cross-union / non-collective patterns)."""
+    n = data.draw(st.sampled_from([2, 4, 8]))
+    devs = tuple(range(n))
+    src = data.draw(annot_strategy(devs, True, True))
+    dst = data.draw(annot_strategy(devs, False, True))
+    shape = (SIZE, SIZE)
+    try:
+        plan = resolve(src, dst, shape)
+    except UnsupportedCommError:
+        assert src.has_partial or dst.has_partial
+        return
+    value = np.random.default_rng(2).normal(size=shape)
+    roundtrip_check(value, src, dst, plan, rng=np.random.default_rng(3))
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(data=st.data())
+def test_hsplits_nonuniform_roundtrip(data):
+    """Non-uniform top-tier splits (mixed-length workloads) stay exact."""
+    w1 = data.draw(st.sampled_from([1, 2, 3]))
+    w2 = data.draw(st.sampled_from([1, 2, 3]))
+    src = HSPMD(dgs=[[0, 1], [2, 3]], dss=[DS({0: 2}), DS({1: 2})],
+                hdim=0, hsplits=[w1, w2])
+    dst_kind = data.draw(st.sampled_from(["uniform", "flip", "gather"]))
+    if dst_kind == "uniform":
+        dst = HSPMD(dgs=[[0, 1], [2, 3]], dss=[DS({0: 2}), DS({1: 2})],
+                    hdim=0, hsplits=[1, 1])
+    elif dst_kind == "flip":
+        dst = HSPMD(dgs=[[0, 1], [2, 3]], dss=[DS({0: 2}), DS({1: 2})],
+                    hdim=0, hsplits=[w2, w1])
+    else:
+        dst = spmd([0, 1, 2, 3], DS({0: 4}))
+    shape = ((w1 + w2) * 8, 8)
+    plan = resolve(src, dst, shape)
+    value = np.random.default_rng(4).normal(size=shape)
+    roundtrip_check(value, src, dst, plan, rng=np.random.default_rng(5))

@@ -1,0 +1,109 @@
+"""Dynamic graph switching tests (paper §6, Fig 12)."""
+
+import numpy as np
+
+from repro.core.annotations import DS, DUP, HSPMD, spmd
+from repro.core.graph import Graph
+from repro.core.simulator import gather, scatter
+from repro.core.switching import execute_switch, plan_switch
+from repro.core.symbolic import Sym
+from repro.core.topology import NvlinkIbTopology
+
+
+def _two_strategy_graph():
+    """One user graph, two annotated strategies (paper Fig 12):
+    strategy 0 = TP over 4 devices; strategy 1 = DP-style over devices 4-7
+    (e.g. after a reconfiguration)."""
+    g = Graph()
+    # strategy 0: Megatron pair — W1 column-parallel, W2 row-parallel
+    s0_w1 = spmd([0, 1, 2, 3], DS({1: 4}))
+    s1_w1 = spmd([4, 5, 6, 7], DS({DUP: 4}))
+    s0_w2 = spmd([0, 1, 2, 3], DS({0: 4}))
+    s1_w2 = spmd([4, 5, 6, 7], DS({DUP: 4}))
+    x = g.placeholder("X", (8, 16, 32),
+                      [spmd([0, 1, 2, 3], DS({DUP: 4})),
+                       spmd([4, 5, 6, 7], DS({0: 4}))])
+    w1 = g.parameter("W1", (32, 64), [s0_w1, s1_w1])
+    w2 = g.parameter("W2", (64, 32), [s0_w2, s1_w2])
+    h = g.dot(x, w1)
+    h2 = g.gelu(h)
+    g.dot(h2, w2)
+    g.deduce()
+    return g
+
+
+def test_switch_plan_reports():
+    g = _two_strategy_graph()
+    rep = plan_switch(g, 0, 1, topology=NvlinkIbTopology())
+    assert rep.total_bytes > 0
+    assert rep.message_count > 0
+    assert rep.planning_seconds < 5.0
+
+
+def test_fused_beats_naive_and_unfused():
+    g = _two_strategy_graph()
+    topo = NvlinkIbTopology()
+    fused = plan_switch(g, 0, 1, topology=topo, mode="fused")
+    unfused = plan_switch(g, 0, 1, topology=topo, mode="unfused")
+    naive = plan_switch(g, 0, 1, topology=topo, mode="naive")
+    # identical total volume, fewer messages, no worse estimated time
+    assert fused.total_bytes == unfused.total_bytes == naive.total_bytes
+    assert fused.message_count <= unfused.message_count <= naive.message_count
+    assert fused.est_transfer_seconds <= naive.est_transfer_seconds + 1e-9
+
+
+def test_switch_execution_is_exact():
+    """Weight migration reproduces exactly the dst-annotation shards."""
+    g = _two_strategy_graph()
+    rng = np.random.default_rng(0)
+    values = {p.name: rng.normal(size=p.shape) for p in g.parameters()}
+    weights = {name: scatter(v, g.tensors[name].annots[0])
+               for name, v in values.items()}
+    migrated = execute_switch(weights, g, 0, 1)
+    for name, v in values.items():
+        np.testing.assert_allclose(gather(migrated[name]), v, atol=1e-6)
+        dst = g.tensors[name].annots[1]
+        for dev in dst.devices:
+            box = dst.device_box(dev, v.shape)
+            want = v[tuple(slice(lo, hi) for lo, hi in box)]
+            np.testing.assert_allclose(migrated[name].parts[dev], want,
+                                       atol=1e-6)
+
+
+def test_switch_roundtrip_back():
+    """Switching A->B->A restores the original sharding exactly."""
+    g = _two_strategy_graph()
+    rng = np.random.default_rng(1)
+    values = {p.name: rng.normal(size=p.shape) for p in g.parameters()}
+    weights = {name: scatter(v, g.tensors[name].annots[0])
+               for name, v in values.items()}
+    there = execute_switch(weights, g, 0, 1)
+    back = execute_switch(there, g, 1, 0)
+    for name, v in values.items():
+        for dev, arr in weights[name].parts.items():
+            np.testing.assert_allclose(back[name].parts[dev], arr, atol=1e-6)
+
+
+def test_switch_overlapping_devices_prefers_local():
+    """Hetero strategy switch where device sets overlap: overlapping
+    shards stay local (heuristic I at switch scale)."""
+    g = Graph()
+    s0 = spmd([0, 1, 2, 3], DS({0: 4}))
+    s1 = HSPMD(dgs=[[0, 1], [2]], dss=[DS({0: 2}), DS({})], hdim=0,
+               hsplits=[1, 1])
+    g.parameter("W", (16, 8), [s0, s1])
+    g.deduce()
+    rep = plan_switch(g, 0, 1)
+    # dst dev 0 needs rows 0-4 and owns 0-4 already: fully local
+    local_dsts = {a.dst for a in rep.plan.local_copies()}
+    assert 0 in local_dsts
+
+
+def test_symbolic_shapes_bound_at_switch():
+    B = Sym("B")
+    g = Graph()
+    g.parameter("W", (B, 8), [spmd([0, 1], DS({0: 2})),
+                              spmd([2, 3], DS({1: 2}))])
+    g.deduce()
+    rep = plan_switch(g, 0, 1, shape_env={"B": 16})
+    assert rep.total_bytes == 16 * 8 * 2  # full tensor moves, bf16

@@ -1,0 +1,42 @@
+"""Symbolic shape tests (paper §5.5)."""
+
+import pytest
+
+from repro.core.symbolic import Sym, bind_shape, free_symbols, is_concrete
+
+
+def test_bind_basic():
+    B, S = Sym("B"), Sym("S")
+    assert bind_shape((B, S, 128), {"B": 4, "S": 16}) == (4, 16, 128)
+
+
+def test_constraint_preserving_arithmetic():
+    B = Sym("B")
+    half = B // 2
+    assert bind_shape((half,), {"B": 8}) == (4,)
+    with pytest.raises(ValueError):
+        bind_shape((half,), {"B": 9})  # non-divisible -> rejected (§5.5)
+
+
+def test_compound_expressions():
+    B, S = Sym("B"), Sym("S")
+    e = (B * S) // 4 + 1
+    assert bind_shape((e,), {"B": 2, "S": 8}) == (5,)
+
+
+def test_unbound_symbol_rejected():
+    with pytest.raises(KeyError):
+        bind_shape((Sym("Z"),), {})
+
+
+def test_nonpositive_rejected():
+    B = Sym("B")
+    with pytest.raises(ValueError):
+        bind_shape((B - 4,), {"B": 4})
+
+
+def test_free_symbols_and_concrete():
+    B = Sym("B")
+    assert free_symbols((B // 2, 7)) == {"B"}
+    assert not is_concrete((B, 4))
+    assert is_concrete((3, 4))
