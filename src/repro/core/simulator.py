@@ -48,14 +48,21 @@ def _decompose(value: np.ndarray, k: int, rng: np.random.Generator) -> list[np.n
 
 
 def scatter(value: np.ndarray, annot: HSPMD,
-            rng: np.random.Generator | None = None) -> ShardedTensor:
-    """Shard a global array according to ``annot``."""
+            rng: np.random.Generator | None = None,
+            decompose=None) -> ShardedTensor:
+    """Shard a global array according to ``annot``.
+
+    ``decompose(value, k, rng) -> [summands]`` overrides the random
+    Partial decomposition (e.g. integer summands make reductions
+    order-insensitive for differential tests against fast collectives).
+    """
     rng = rng or np.random.default_rng(0)
+    decompose = decompose or _decompose
     shape = tuple(value.shape)
 
     # top tier: one slab (or summand) per subgroup
     if annot.hdim == PARTIAL:
-        slabs = _decompose(value, annot.hsize, rng)
+        slabs = decompose(value, annot.hsize, rng)
         slab_boxes = [tuple((0, s) for s in shape)] * annot.hsize
     else:
         slabs, slab_boxes = [], []
@@ -76,7 +83,7 @@ def scatter(value: np.ndarray, annot: HSPMD,
     for g, (dg, ds) in enumerate(zip(annot.dgs, annot.dss)):
         slab = slabs[g]
         kp = ds.get(PARTIAL)
-        summands = _decompose(slab, kp, rng)
+        summands = decompose(slab, kp, rng)
         for pos, dev in enumerate(dg):
             c = ds.coords(pos)
             piece = summands[c.get(PARTIAL, 0)]

@@ -81,12 +81,19 @@ def plan_switch(graph: Graph, src_strategy: int, dst_strategy: int,
 def execute_switch(weights: dict[str, ShardedTensor],
                    graph: Graph, src_strategy: int, dst_strategy: int,
                    shape_env: dict[str, int] | None = None,
-                   topology: Topology | None = None) -> dict[str, ShardedTensor]:
-    """Migrate simulated weight shards to the destination strategy.
+                   topology: Topology | None = None, *,
+                   backend: str = "sim", mesh=None,
+                   reduction: str = "exact") -> dict[str, ShardedTensor]:
+    """Migrate weight shards to the destination strategy.
 
     Per-tensor plans share the fused global planning state; execution is
-    per tensor on the simulator (numerically exact)."""
+    per tensor either on the virtual-device simulator (``backend="sim"``,
+    numerically exact) or on real JAX devices through the shard_map
+    execution backend (``backend="jax"`` — the fused-BSR messages become
+    actual collective-permutes; see ``repro.runtime``)."""
     from .symbolic import bind_shape
+    if backend not in ("sim", "jax"):
+        raise ValueError(f"unknown switch backend {backend!r}")
     report = plan_switch(graph, src_strategy, dst_strategy, shape_env,
                          topology, mode="fused")
     by_tensor: dict[str, list] = {}
@@ -101,5 +108,10 @@ def execute_switch(weights: dict[str, ShardedTensor],
         sub = BsrPlan(by_tensor.get(p.name, []), fused=True)
         cp = CommPlan(src=src, dst=dst, kind="switch:BSR")
         cp.add(sub.to_step(), dst)
-        out[p.name] = apply_plan(weights[p.name], cp)
+        if backend == "jax":
+            from repro.runtime import execute_sharded
+            out[p.name] = execute_sharded(weights[p.name], cp, mesh,
+                                          reduction=reduction)
+        else:
+            out[p.name] = apply_plan(weights[p.name], cp)
     return out

@@ -1,0 +1,19 @@
+"""Pallas API drift shim.
+
+jax renamed the Mosaic TPU compiler-params class across releases:
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x) became ``pltpu.CompilerParams``
+(newer).  All kernels go through :func:`tpu_compiler_params` so one
+``getattr`` check absorbs the drift.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct the TPU compiler params object under either jax API."""
+    return _CompilerParams(**kwargs)

@@ -25,7 +25,8 @@ import sys
 import time
 
 from repro.launch.hloparse import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                                   collective_bytes)
+                                   collective_bytes,
+                                   normalize_cost_analysis)
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +96,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
 
     flops = float(cost.get("flops", 0.0))

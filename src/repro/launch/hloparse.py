@@ -39,6 +39,16 @@ def _shape_bytes(expr: str) -> int:
     return total
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """``Compiled.cost_analysis()`` returned ``[dict]`` through jax 0.4.x
+    and a plain ``dict`` from 0.5 on; normalize to one flat dict."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Sum result-shape bytes of every collective op in the per-device
     program (proxy for on-wire traffic per device per step)."""

@@ -29,6 +29,20 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(dev_array, axes)
 
 
+def make_runtime_mesh(n_devices: int | None = None, axis: str = "dev") -> Mesh:
+    """1-D mesh for the communication-plan execution backend
+    (``repro.runtime``): one axis over the first ``n_devices`` host
+    devices; HSPMD logical device ids map onto axis positions."""
+    devices = jax.devices()
+    n = n_devices or len(devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(see repro.runtime.harness)")
+    return Mesh(np.array(devices[:n]), (axis,))
+
+
 def make_smoke_mesh(n_devices: int | None = None,
                     axes=("data", "model")) -> Mesh:
     """Tiny mesh over whatever devices exist (tests: usually 1)."""

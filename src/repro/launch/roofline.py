@@ -43,14 +43,15 @@ from repro.models.model import (_empty_cache_block, apply_block, init_block,
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 from repro.sharding.rules import param_specs, to_named
 from repro.launch.hloparse import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                                   collective_bytes)
+                                   collective_bytes,
+                                   normalize_cost_analysis)
 
 SDS = jax.ShapeDtypeStruct
 N_MICRO = 8
 
 
 def _cost(compiled):
-    c = compiled.cost_analysis()
+    c = normalize_cost_analysis(compiled.cost_analysis())
     return {
         "flops": float(c.get("flops", 0.0)),
         "hbm_bytes": float(c.get("bytes accessed", 0.0)),

@@ -1,0 +1,25 @@
+"""Real-device execution backend for resolved HSPMD communication plans.
+
+``core.comm_resolve`` turns annotation pairs into :class:`CommPlan`s and
+``core.simulator`` validates them numerically on virtual devices; this
+package lowers the same plans onto *real* JAX devices — every CommStep
+kind becomes ``jax.lax`` collectives / ``ppermute`` inside one
+``jax.shard_map`` program, per-device specialized via ``lax.switch``
+(paper §5.3).  ``runtime.diff`` checks every executed plan bit-exactly
+against the simulator; ``runtime.harness`` forces N CPU host devices so
+all of it runs anywhere.
+"""
+
+from .backend import (CompiledPlan, compile_plan, device_items,
+                      execute_plan, execute_sharded, resharding_fn)
+from .diff import differential_check, integer_decompose, roundtrip_check
+from .harness import ensure_host_devices, host_device_env, run_subprocess
+from .lowering import DeviceOrder, lower_plan, pad_shape
+
+__all__ = [
+    "CompiledPlan", "DeviceOrder", "compile_plan", "device_items",
+    "differential_check", "ensure_host_devices", "execute_plan",
+    "execute_sharded", "host_device_env", "integer_decompose",
+    "lower_plan", "pad_shape", "resharding_fn", "roundtrip_check",
+    "run_subprocess",
+]

@@ -1,0 +1,220 @@
+"""Differential self-test: every CommStep kind, simulator vs real devices.
+
+Run as a module under the forced-host-device harness::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.runtime.selftest
+
+For 2/4/8 virtual devices it builds an annotation pair that resolves to
+each operator kind (ID, SR, AR, RS, AG, SplitAR, SplitRS, SplitAG, BSR,
+Slice), executes the plan bit-differentially against the simulator, and
+additionally checks: the fast psum reduction path (integer shards), the
+paper's Fig 9 heterogeneous multi-step stage, resharding round-trips, and
+the dynamic-switch weight migration through the fused-BSR path on the jax
+backend.  Emits one machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
+(consumed by ``tests/test_runtime.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+from repro.runtime.harness import ensure_host_devices
+
+ensure_host_devices(8)  # must precede any jax import
+
+import numpy as np  # noqa: E402
+
+from repro.core.annotations import DS, DUP, HSPMD, PARTIAL, spmd  # noqa: E402
+
+SHAPE = (16, 8)
+KINDS = ("ID", "SR", "AR", "RS", "AG", "SplitAR", "SplitRS", "SplitAG",
+         "BSR", "Slice")
+
+
+def kind_cases(n: int) -> dict[str, tuple[HSPMD, HSPMD]]:
+    """(src, dst) pairs over n devices resolving to each operator kind."""
+    devs = list(range(n))
+    half = n // 2
+    g0, g1 = devs[:half], devs[half:]
+    row = DS({0: half}) if half > 1 else DS({})
+    col = DS({1: half}) if half > 1 else DS({})
+    return {
+        "ID": (spmd(devs, DS({0: n})), spmd(devs, DS({0: n}))),
+        "SR": (spmd(devs, DS({0: n})),
+               spmd(list(reversed(devs)), DS({0: n}))),
+        "AR": (spmd(devs, DS({PARTIAL: n})), spmd(devs, DS({DUP: n}))),
+        "RS": (spmd(devs, DS({PARTIAL: n})), spmd(devs, DS({0: n}))),
+        "AG": (spmd(devs, DS({0: n})), spmd(devs, DS({DUP: n}))),
+        "BSR": (spmd(devs, DS({0: n})), spmd(devs, DS({1: n}))),
+        "SplitAR": (HSPMD([g0, g1], [row, row], hdim=PARTIAL),
+                    HSPMD([g0, g1], [row, row], hdim=DUP)),
+        "SplitRS": (HSPMD([g0, g1], [row, row], hdim=PARTIAL),
+                    HSPMD([g0, g1], [row, row], hdim=0)),
+        "SplitAG": (HSPMD([g0, g1], [row, row], hdim=0),
+                    HSPMD([g0, g1], [row, row], hdim=DUP)),
+        "Slice": (HSPMD([g0, g1], [col, col], hdim=DUP),
+                  HSPMD([g0, g1], [col, col], hdim=0)),
+    }
+
+
+def fig9_plan():
+    """The paper's Fig 9 CommOp id=2: RS + BSR + ID in one stage."""
+    from repro.core.graph import Graph
+    from repro.core.specialize import resolve_comm_ops
+
+    g = Graph()
+    x_annot = HSPMD(dgs=[[0, 3], [2, 4], [1]],
+                    dss=[DS({2: 2}), DS({0: 2}), DS({})], hdim=0)
+    w_dup = HSPMD(dgs=[[0, 3], [2, 4], [1]],
+                  dss=[DS({DUP: 2}), DS({DUP: 2}), DS({})], hdim=DUP)
+    w_tp = HSPMD(dgs=[[0, 3], [2, 4], [1]],
+                 dss=[DS({0: 2}), DS({DUP: 2}), DS({})], hdim=DUP)
+    x = g.placeholder("X", (12, 16, 32), [x_annot])
+    w = g.parameter("W", (32, 64), [w_dup])
+    x2 = g.gelu(x)
+    w2 = g.comm(w, w_tp)
+    y = g.dot(x2, w2, name="Y")
+    y_next = HSPMD(dgs=[[0, 3], [5, 6], [1]],
+                   dss=[DS({0: 2}), DS({1: 2}), DS({})], hdim=0)
+    g.comm(y, y_next, name="Y2")
+    g.deduce()
+    rc = resolve_comm_ops(g)[1]
+    return rc.plan, tuple(rc.op.inputs[0].shape)
+
+
+def run_all() -> dict:
+    from repro.launch.mesh import make_runtime_mesh
+    from repro.runtime.diff import (differential_check, integer_decompose,
+                                    roundtrip_check)
+
+    report: dict = {"cases": {}}
+
+    def record(key, fn):
+        try:
+            extra = fn() or {}
+            report["cases"][key] = {"ok": True, **extra}
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            report["cases"][key] = {
+                "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc(limit=8)}
+
+    meshes = {n: make_runtime_mesh(n) for n in (2, 4, 8)}
+    rng = np.random.default_rng(0)
+    value = rng.normal(size=SHAPE).astype(np.float32)
+    ivalue = rng.integers(-8, 9, size=SHAPE).astype(np.float32)
+
+    # 1. the kind sweep: exact differential equivalence on 2/4/8 devices
+    for n, mesh in meshes.items():
+        cases = kind_cases(n)
+        assert set(cases) == set(KINDS), sorted(set(cases) ^ set(KINDS))
+        for kind in KINDS:
+            src, dst = cases[kind]
+            def case(kind=kind, src=src, dst=dst, mesh=mesh):
+                plan = differential_check(value, src, dst, mesh)
+                kinds = [s.kind for s in plan.steps]
+                assert kind in kinds, (kind, kinds, plan.kind)
+                return {"plan_kind": plan.kind, "step_kinds": kinds}
+            record(f"{kind}/{n}", case)
+
+    # 2. fast psum reduction path (integer shards => order-insensitive)
+    for kind in ("AR", "RS", "SplitAR", "SplitRS"):
+        src, dst = kind_cases(8)[kind]
+        def fast(src=src, dst=dst):
+            plan = differential_check(
+                ivalue, src, dst, meshes[8], reduction="fast",
+                decompose=integer_decompose)
+            return {"step_kinds": [s.kind for s in plan.steps]}
+        record(f"fast:{kind}/8", fast)
+
+    # 3. heterogeneous extras: non-uniform hsplits + Fig 9 multi-step stage
+    def hsplits_case():
+        src = HSPMD(dgs=[[0, 1], [2, 3]], dss=[DS({DUP: 2}), DS({0: 2})],
+                    hdim=0, hsplits=[1, 3])
+        dst = spmd([0, 1, 2, 3], DS({0: 4}))
+        plan = differential_check(value, src, dst, meshes[4])
+        return {"plan_kind": plan.kind}
+    record("hetero:hsplits/4", hsplits_case)
+
+    def fig9_case():
+        plan, shape = fig9_plan()
+        v = np.asarray(rng.normal(size=shape), np.float32)
+        differential_check(v, plan.src, plan.dst, meshes[8], plan=plan)
+        return {"plan_kind": plan.kind,
+                "step_kinds": [s.kind for s in plan.steps]}
+    record("hetero:fig9/7", fig9_case)
+
+    # 4. resharding round-trips (src -> dst -> src restores the shards)
+    for n, mesh in meshes.items():
+        def rt_split(n=n, mesh=mesh):
+            roundtrip_check(value, spmd(range(n), DS({0: n})),
+                            spmd(range(n), DS({1: n})), mesh)
+        record(f"roundtrip:split/{n}", rt_split)
+    def rt_hetero():
+        half = [0, 1], [2, 3]
+        src = HSPMD(list(half), [DS({0: 2}), DS({0: 2})], hdim=0)
+        dst = spmd([0, 1, 2, 3], DS({DUP: 4}))
+        roundtrip_check(value, src, dst, meshes[4])
+    record("roundtrip:hetero/4", rt_hetero)
+
+    # 5. dynamic-switch weight migration through the fused-BSR path
+    def switch_case():
+        from repro.core.graph import Graph
+        from repro.core.simulator import scatter
+        from repro.core.switching import execute_switch
+
+        g = Graph()
+        s0_w1 = spmd([0, 1, 2, 3], DS({1: 4}))
+        s1_w1 = spmd([4, 5, 6, 7], DS({DUP: 4}))
+        s0_w2 = spmd([0, 1, 2, 3], DS({0: 4}))
+        s1_w2 = spmd([4, 5, 6, 7], DS({DUP: 4}))
+        g.placeholder("X", (8, 16, 32),
+                      [spmd([0, 1, 2, 3], DS({DUP: 4})),
+                       spmd([4, 5, 6, 7], DS({0: 4}))])
+        w1 = g.parameter("W1", (32, 64), [s0_w1, s1_w1])
+        w2 = g.parameter("W2", (64, 32), [s0_w2, s1_w2])
+        h = g.dot(g.tensors["X"], w1)
+        g.dot(g.gelu(h), w2)
+        g.deduce()
+
+        srng = np.random.default_rng(3)
+        values = {p.name: srng.normal(size=p.shape).astype(np.float32)
+                  for p in g.parameters()}
+        weights = {name: scatter(v, g.tensors[name].annots[0])
+                   for name, v in values.items()}
+        real = execute_switch(weights, g, 0, 1, backend="jax",
+                              mesh=meshes[8])
+        sim = execute_switch(weights, g, 0, 1, backend="sim")
+        for name, v in values.items():
+            dst = g.tensors[name].annots[1]
+            for dev in dst.devices:
+                box = dst.device_box(dev, v.shape)
+                want = v[tuple(slice(lo, hi) for lo, hi in box)]
+                np.testing.assert_array_equal(real[name].parts[dev], want)
+                np.testing.assert_array_equal(real[name].parts[dev],
+                                              sim[name].parts[dev])
+        # and back: jax-backend migration is reversible
+        back = execute_switch(real, g, 1, 0, backend="jax", mesh=meshes[8])
+        for name in values:
+            for dev, arr in weights[name].parts.items():
+                np.testing.assert_array_equal(back[name].parts[dev], arr)
+    record("switch:jax/8", switch_case)
+
+    report["ok"] = all(c["ok"] for c in report["cases"].values())
+    return report
+
+
+def main() -> int:
+    report = run_all()
+    for key, c in sorted(report["cases"].items()):
+        status = "ok" if c["ok"] else f"FAIL: {c.get('error')}"
+        print(f"  {key:24s} {status}")
+    print("RUNTIME_SELFTEST_JSON " + json.dumps(report))
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

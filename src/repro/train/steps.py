@@ -67,6 +67,28 @@ def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     return train_step
 
 
+def build_switch_step(graph, src_strategy: int, dst_strategy: int, *,
+                      shape_env: dict[str, int] | None = None,
+                      topology=None, backend: str = "sim", mesh=None,
+                      reduction: str = "exact"):
+    """Dynamic-strategy weight migration as a reusable step (paper §6).
+
+    Returns ``switch_step(weights) -> weights`` re-sharding every
+    parameter from ``src_strategy``'s annotations to ``dst_strategy``'s
+    through the fused-BSR plan — on the virtual-device simulator
+    (``backend="sim"``) or on real devices via the shard_map execution
+    backend (``backend="jax"``).
+    """
+    from repro.core.switching import execute_switch
+
+    def switch_step(weights):
+        return execute_switch(weights, graph, src_strategy, dst_strategy,
+                              shape_env, topology, backend=backend,
+                              mesh=mesh, reduction=reduction)
+
+    return switch_step
+
+
 def build_prefill_step(cfg: ModelConfig):
     def prefill_step(params, batch):
         # head computed on the last position only (what a server samples

@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from jax.sharding import Mesh

@@ -7,6 +7,10 @@ the dst decomposition of the same global value.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
