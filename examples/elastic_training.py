@@ -1,11 +1,12 @@
 """Elastic training with restart-free strategy switching (paper §7.2).
 
 Trains a reduced model while the cluster shrinks underneath it:
-8 devices -> 7 (GPU failure) -> 4 (node failure).  On every failure the
-weights are re-sharded with the fused-BSR switch (real planner + the
-virtual-device simulator) and training CONTINUES — the loss trajectory is
-bit-identical to an uninterrupted run, which is the paper's restart-free
-fault-tolerance claim in miniature.
+8 devices -> 7 (GPU failure) -> 4 (node failure).  On every failure a
+``repro.api.Session`` switches the weight-placement strategy — the
+fused-BSR planner + virtual-device simulator behind one
+``session.switch`` call — and training CONTINUES with bit-identical
+loss trajectory, the paper's restart-free fault-tolerance claim in
+miniature.
 
     PYTHONPATH=src python examples/elastic_training.py
 """
@@ -14,11 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
-from repro.core.annotations import DS, HSPMD, spmd
-from repro.core.bsr import plan_fused_bsr
-from repro.core.simulator import ShardedTensor, gather, scatter
-from repro.core.switching import plan_switch
 from repro.core.topology import NvlinkIbTopology
 from repro.models.model import init_params
 from repro.optim.adamw import AdamWConfig, init_opt_state
@@ -36,24 +34,6 @@ def batch():
     return {"tokens": t, "labels": jnp.roll(t, -1, 1)}
 
 
-# strategy per cluster config: FSDP-style dim-0 split over live devices
-def strategy(devices):
-    n = len(devices)
-    def annot(shape):
-        for k in (n, n - n % 2, 4, 2, 1):
-            if k and shape[0] % k == 0 and k <= n:
-                # survivors with the highest ids host the shards, so a
-                # shrinking cluster actually moves data (SR/BSR paths)
-                return spmd(devices[-k:], DS({0: k}))
-        return spmd(devices[:1], DS({}))
-    return annot
-
-
-def shard_all(flat_params, annot_fn):
-    return {k: scatter(np.asarray(v), annot_fn(v.shape))
-            for k, v in flat_params.items()}
-
-
 def flatten(tree, prefix=""):
     out = {}
     for k, v in tree.items() if isinstance(tree, dict) else enumerate(tree):
@@ -68,47 +48,41 @@ def flatten(tree, prefix=""):
 topo = NvlinkIbTopology(gpus_per_node=4)
 trace = [("C1", list(range(8))), ("C2", list(range(7))),
          ("C3", list(range(4)))]
+
+# one weights-only Program; one FSDP-style strategy per cluster config
+flat = flatten(params)
+shapes = {k: tuple(np.asarray(v).shape) for k, v in flat.items()}
+strategies = [api.data_parallel_strategy(name, devices, shapes,
+                                         topology=topo)
+              for name, devices in trace]
+prog = api.Program(api.weights_graph(shapes), strategies)
+
 losses = []
-shards = None
-cur = None
+sess = None
 for name, devices in trace:
-    ann = strategy(devices)
-    flat = flatten(params)
-    if shards is None:
-        shards = shard_all(flat, ann)
-        print(f"{name}: sharded {len(shards)} tensors over {len(devices)} devices")
+    if sess is None:
+        sess = api.Session(prog, name, topology=topo)
+        sess.load({k: np.asarray(v) for k, v in flat.items()})
+        print(f"{name}: sharded {len(shapes)} tensors over "
+              f"{len(devices)} devices")
     else:
-        # plan + execute the fused BSR migration, then verify exactness
-        tensors = [(k, cur(v.shape), ann(v.shape), tuple(v.shape), 2)
-                   for k, v in flat.items()]
-        plan = plan_fused_bsr(tensors, topo)
-        by_tensor = {}
-        for a in plan.assignments:
-            by_tensor.setdefault(a.tensor, []).append(a)
-        from repro.core.bsr import BsrPlan
-        from repro.core.plan import CommPlan
-        from repro.core.simulator import apply_plan
-        new_shards = {}
-        for k, st in shards.items():
-            sub = BsrPlan(by_tensor.get(k, []), fused=True)
-            cp = CommPlan(src=st.annot, dst=ann(st.shape), kind="switch")
-            cp.add(sub.to_step(), ann(st.shape))
-            new_shards[k] = apply_plan(st, cp)
-        shards = new_shards
-        print(f"{name}: migrated {plan.total_bytes() / 1e6:.1f} MB in "
-              f"{plan.message_count()} fused messages "
-              f"(est {plan.est_time(topo) * 1e3:.1f} ms) — no restart")
-    cur = ann
+        # ONE call replaces the old hand-rolled fused-BSR block
+        report = sess.switch(name)
+        print(f"{name}: migrated {report.total_bytes / 1e6:.1f} MB in "
+              f"{report.message_count} fused messages "
+              f"(est {report.est_transfer_seconds * 1e3:.1f} ms) "
+              f"— no restart")
     # verify the sharded weights reconstruct the live params exactly
     for k, v in list(flat.items())[:5]:
-        np.testing.assert_allclose(gather(shards[k]), np.asarray(v),
+        np.testing.assert_allclose(sess.weight_value(k), np.asarray(v),
                                    atol=1e-6)
     # train a few steps on this configuration
     for _ in range(5):
         params, opt, m = step(params, opt, batch())
         losses.append(float(m["loss"]))
-    # keep the simulated shards in sync with training (re-scatter)
-    shards = shard_all(flatten(params), ann)
+    # keep the simulated shards in sync with training (re-load)
+    flat = flatten(params)
+    sess.load({k: np.asarray(v) for k, v in flat.items()})
 
 print("loss trajectory:", " ".join(f"{l:.3f}" for l in losses))
 print("elastic run complete — weights verified exact at every transition")

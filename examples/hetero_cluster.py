@@ -2,14 +2,18 @@
 
 Compares the best *uniform* strategy (what DeepSpeed/Megatron can express)
 against Hetu's heterogeneous strategies (paper Appendix A.2, Table 5) on
-the paper's H800+H20 clusters, using the calibrated cost model.
+the paper's H800+H20 clusters, using the calibrated cost model — then
+exports one Table 5 strategy through ``repro.api`` and compiles its
+per-layer weight program (grad-sync comm plans + migration cost).
 
     PYTHONPATH=src python examples/hetero_cluster.py
 """
 
+from repro import api
 from repro.core.costmodel import (LLAMA_32B, LLAMA_70B, best_uniform,
                                   paper_cluster, step_time)
-from repro.scenarios.hetero import HETU_STRATEGIES
+from repro.scenarios.hetero import (HETU_STRATEGIES, layer_weight_shapes,
+                                    to_api_strategy)
 
 CASES = [
     ("32B, 16 H800 + 16 H20", LLAMA_32B, 16, 16, 64),
@@ -25,6 +29,27 @@ for name, model, n800, n20, gbs in CASES:
     strat = HETU_STRATEGIES[(model.name, n800, n20)]()
     t_het = step_time(cluster, model, strat, 4096)
     print(f"{name:26s} {t_uni:13.2f}s {t_het:12.2f}s {t_uni / t_het:7.2f}x")
+
+# --- the same Table 5 strategies as repro.api objects -----------------------
+print("\n=== Table 5 strategies through repro.api ===")
+model = LLAMA_32B
+shapes = layer_weight_shapes(model)
+hetu = to_api_strategy("hetu-32b", HETU_STRATEGIES[(model.name, 16, 16)](),
+                       model)
+uniform, _ = best_uniform(paper_cluster(16, 16), model, list(range(32)),
+                          64, 4096)
+uni = to_api_strategy("uniform-32b", uniform, model)
+
+prog = api.Program(api.weights_graph(shapes), [hetu, uni])
+plan = prog.compile("hetu-32b")
+print(f"hetu-32b weight placement: {len(plan.devices)} devices, "
+      f"layer0 -> {plan.graph.tensors['layer0'].annots[0]}")
+
+# cost of switching uniform -> hetu mid-run (fused BSR, paper §6.2)
+tensors = [(n, uni.annots[n], hetu.annots[n], shapes[n], 2)
+           for n in shapes]
+report = api.estimate_switch(tensors)
+print(f"uniform -> hetu switch: {report.summary()}")
 
 print("""
 Matches the paper's §7.1 finding: on heterogeneous clusters the uniform

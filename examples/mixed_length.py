@@ -2,14 +2,22 @@
 
 Runs the baseline / HotSPa(Hetu-A) / Hetu-B policies over the same
 synthetic CommonCrawl-like token stream and prints the per-step time
-distribution + the Fig 16-style strategy trace for Hetu-B.
+distribution + the Fig 16-style strategy trace for Hetu-B.  The two
+Hetu-B strategies are also exported through ``repro.api`` to price the
+regime-change switch the trace pays.
 
     PYTHONPATH=src python examples/mixed_length.py
 """
 
 import numpy as np
 
-from repro.scenarios.mixed_length import run_mixed_length
+from repro import api
+from repro.core.costmodel import LLAMA_32B
+from repro.core.topology import NvlinkIbTopology
+from repro.scenarios.hetero import layer_weight_shapes, to_api_strategy
+from repro.scenarios.mixed_length import (hetu_b_strategy_long,
+                                          hetu_b_strategy_short,
+                                          run_mixed_length)
 
 N_STEPS = 30
 
@@ -33,3 +41,15 @@ for r in traces["hetu_b"][:20]:
 base = np.mean([r.seconds for r in traces["baseline"]])
 hb = np.mean([r.seconds for r in traces["hetu_b"]])
 print(f"\nHetu-B speedup over fixed-strategy baseline: {base / hb:.2f}x")
+
+# the S1 <-> S2 regime switch as repro.api strategies (what each "<- switch"
+# marker above pays, priced by the fused-BSR planner)
+model = LLAMA_32B
+shapes = layer_weight_shapes(model)
+s_long = to_api_strategy("S1-long", hetu_b_strategy_long(model), model)
+s_short = to_api_strategy("S2-short", hetu_b_strategy_short(model), model)
+api.Program(api.weights_graph(shapes), [s_long, s_short])  # validates
+report = api.estimate_switch(
+    [(n, s_long.annots[n], s_short.annots[n], shapes[n], 2)
+     for n in shapes], NvlinkIbTopology(gpus_per_node=8, nvlink_gbps=900.0))
+print(f"S1 -> S2 switch cost (fused BSR): {report.summary()}")

@@ -1,46 +1,86 @@
-"""Quickstart: HSPMD annotations, communication resolution, and a short
-real training run — the paper's abstractions end to end in two minutes.
+"""Quickstart: the `repro.api` front door — Strategy -> Program ->
+Session with pluggable executors, plus a short real training run.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-# --- 1. HSPMD annotations (paper §3) ---------------------------------------
-from repro.core.annotations import DS, DUP, HSPMD, PARTIAL, spmd
+from repro import api
 
+# --- 1. HSPMD annotations (paper §3) ---------------------------------------
 print("=== 1. HSPMD annotations ===")
 # classical SPMD (HSize=1): tensor split over 4 devices
-flat = spmd([0, 1, 2, 3], DS({0: 4}))
+flat = api.spmd([0, 1, 2, 3], api.DS({0: 4}))
 # heterogeneous: two subgroups with different internal sharding,
 # batch split 3:1 across them (a fast pair and a slow solo device)
-hetero = HSPMD(dgs=[[0, 1], [2]], dss=[DS({1: 2}), DS({})],
-               hdim=0, hsplits=[3, 1])
+hetero = api.HSPMD(dgs=[[0, 1], [2]], dss=[api.DS({1: 2}), api.DS({})],
+                   hdim=0, hsplits=[3, 1])
 print("flat  :", flat)
 print("hetero:", hetero)
 shape = (16, 8)
 for dev in (0, 2):
     print(f"  device {dev} holds box {hetero.device_box(dev, shape)}")
 
-# --- 2. hierarchical communication resolution (paper §4) --------------------
-from repro.core.comm_resolve import resolve
-from repro.core.simulator import roundtrip_check
+# --- 2. a single-device program + two named strategies ----------------------
+print("\n=== 2. Strategy -> Program -> CompiledPlan ===")
+g = api.Graph()
+g.placeholder("X", (16, 32))
+g.parameter("W1", (32, 24))
+h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"), name="H")
+g.comm(h, name="H2")          # annotation point: strategies re-shard here
+g.parameter("W2", (24, 8))
+g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
 
-print("\n=== 2. communication resolution ===")
-plan = resolve(flat, hetero, shape)
+# strategy A: TP stage on devices 0-3, pipeline hop to row-split 4-7
+pipeline = api.Strategy("tp-pipeline", {
+    "X": api.spmd([0, 1, 2, 3], api.DS({api.DUP: 4})),
+    "W1": api.spmd([0, 1, 2, 3], api.DS({1: 4})),
+    "H2": api.spmd([4, 5, 6, 7], api.DS({0: 4})),
+    "W2": api.spmd([4, 5, 6, 7], api.DS({api.DUP: 4})),
+})
+# strategy B: pure data parallelism on devices 0-3
+dataparallel = api.Strategy("dp", {
+    "X": api.spmd([0, 1, 2, 3], api.DS({0: 4})),
+    "W1": api.spmd([0, 1, 2, 3], api.DS({api.DUP: 4})),
+    "H2": api.spmd([0, 1, 2, 3], api.DS({0: 4})),
+    "W2": api.spmd([0, 1, 2, 3], api.DS({api.DUP: 4})),
+})
+prog = api.Program(g, [pipeline, dataparallel])
+plan = prog.compile("tp-pipeline")
 print(plan.describe())
-value = np.random.default_rng(0).normal(size=shape)
-roundtrip_check(value, flat, hetero, plan)  # numerically exact
-print("numerical roundtrip: OK")
+print("device 0 runs:", [i.kind for i in plan.exec_items(0)])
+print("device 5 runs:", [i.kind for i in plan.exec_items(5)])
 
-# --- 3. the gradient-sync pattern of heterogeneous DP (Fig 17) -------------
-src = HSPMD(dgs=[[0, 1], [2]], dss=[DS({1: 2}), DS({})], hdim=PARTIAL)
-dst = HSPMD(dgs=[[0, 1], [2]], dss=[DS({1: 2}), DS({})], hdim=DUP)
-plan = resolve(src, dst, shape)
-print("hetero-DP grad sync ->", plan.kind)
+# --- 3. Session: execute + restart-free strategy switch ---------------------
+print("\n=== 3. Session.run + Session.switch ===")
+rng = np.random.default_rng(0)
+xv = rng.normal(size=(16, 32)).astype(np.float32)
+w1v = rng.normal(size=(32, 24)).astype(np.float32)
+w2v = rng.normal(size=(24, 8)).astype(np.float32)
+
+sess = api.Session(prog, "tp-pipeline", executor=api.SimulatorExecutor())
+sess.load({"W1": w1v, "W2": w2v})
+out = sess.run({"X": xv})
+want = np.maximum(xv @ w1v, 0) @ w2v
+np.testing.assert_allclose(out.value("Y"), want, atol=1e-5)
+print("numerical roundtrip: OK (executor:", sess.executor.name + ")")
+
+report = sess.switch("dp")    # fused-BSR weight migration, no restart
+print("switched tp-pipeline -> dp:", report.summary())
+out = sess.run({"X": xv})
+np.testing.assert_allclose(out.value("Y"), want, atol=1e-5)
+print("post-switch output identical: OK")
+
+# the gradient-sync pattern of heterogeneous DP (Fig 17) still one call:
+src = api.HSPMD(dgs=[[0, 1], [2]], dss=[api.DS({1: 2}), api.DS({})],
+                hdim=api.PARTIAL)
+dst = api.HSPMD(dgs=[[0, 1], [2]], dss=[api.DS({1: 2}), api.DS({})],
+                hdim=api.DUP)
+print("hetero-DP grad sync ->", api.resolve(src, dst, shape).kind)
 
 # --- 4. a short REAL training run (reduced Qwen2 config) -------------------
-print("\n=== 3. training a reduced model ===")
+print("\n=== 4. training a reduced model ===")
 import jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.models.model import init_params

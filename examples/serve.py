@@ -1,7 +1,9 @@
 """Serving example: batched prefill + decode with KV/SSM caches.
 
 Generates continuations for a batch of prompts with a reduced model —
-exercising the same serve_step the decode dry-run shapes lower.
+exercising the same serve_step the decode dry-run shapes lower — and
+shows the serving-time weight placement as a compiled ``repro.api``
+strategy (TP column-split projections, the §7 serving layout).
 
     PYTHONPATH=src python examples/serve.py [--arch mamba2-370m]
 """
@@ -13,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
 from repro.models.model import (_run_encoder, decode_step, forward,
                                 init_decode_state, init_params)
@@ -25,6 +28,24 @@ ap.add_argument("--gen", type=int, default=32)
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced()
+
+# --- serving-time weight placement as a compiled api strategy ----------------
+# TP4 serving replicas: projections column-split over a 4-device group,
+# switchable to a TP2x2 layout when half the serving pod is drained.
+proj_shapes = {"wq": (cfg.d_model, cfg.d_model),
+               "wo": (cfg.d_model, cfg.d_model)}
+tp4 = api.Strategy("serve-tp4", {
+    n: api.spmd([0, 1, 2, 3], api.DS({1: 4})) for n in proj_shapes})
+tp2 = api.Strategy("serve-tp2", {
+    n: api.spmd([0, 1], api.DS({1: 2})) for n in proj_shapes})
+serve_prog = api.Program(api.weights_graph(proj_shapes), [tp4, tp2])
+compiled = serve_prog.compile("serve-tp4")
+drain = api.estimate_switch(
+    [(n, tp4.annots[n], tp2.annots[n], proj_shapes[n], 2)
+     for n in proj_shapes])
+print(f"serving placement: {compiled.strategy.name} over "
+      f"{len(compiled.devices)} devices; drain to tp2 = {drain.summary()}")
+
 params = init_params(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(0)
 B, P = args.batch, args.prompt_len

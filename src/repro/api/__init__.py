@@ -1,0 +1,69 @@
+"""`repro.api` — the front door to the HSPMD pipeline.
+
+One coherent compile-and-run surface over the paper's abstractions::
+
+    from repro import api
+
+    g = api.Graph()                       # single-device view (§5.1)
+    x = g.placeholder("X", (8, 16))
+    w = g.parameter("W", (16, 4))
+    y = g.dot(x, g.comm(w, name="W'"), name="Y")
+
+    tp = api.Strategy("tp", {...})        # named annotation bundles (§3)
+    dp = api.Strategy("dp", {...})
+    prog = api.Program(g, [tp, dp])       # deduction per strategy (§6.1)
+
+    plan = prog.compile("tp")             # §4 comm resolution + §5.3-5.4
+    plan.exec_items(device)               #   per-device executable graph
+    plan.cost.summary()                   #   analytic cost / roofline
+
+    sess = api.Session(prog, "tp", executor=api.JaxExecutor())
+    sess.load({"W": w_value})
+    out = sess.run({"X": x_value})        # one shard_map program (§5.3)
+    report = sess.switch("dp")            # fused-BSR, restart-free (§6.2)
+
+Executors are pluggable (:class:`Executor`): ``SimulatorExecutor`` runs
+the virtual-device numpy spec, ``JaxExecutor`` the real-device shard_map
+backend — bit-exact against each other (``runtime.selftest``).
+
+The pre-API entry points (``core.specialize.specialize``,
+``core.comm_resolve.resolve``, ``runtime.execute_plan`` …) remain
+importable as shims; see README "Migrating to repro.api".
+"""
+
+from repro.core.annotations import (DG, DS, DUP, PARTIAL, HSPMD, replicated,
+                                    spmd)
+from repro.core.comm_resolve import resolve
+from repro.core.graph import DeductionError, DeductionReport, Graph
+from repro.core.plan import CommPlan
+from repro.core.simulator import ShardedTensor, gather, scatter
+from repro.core.specialize import (ExecItem, ExecutableGraph, Pipeline,
+                                   SpecializationResult)
+from repro.core.switching import (SwitchOutcome, SwitchReport,
+                                  plan_tensor_switch)
+from repro.core.topology import (NvlinkIbTopology, Topology,
+                                 UniformTopology)
+
+from .executors import (Executor, JaxExecutor, SimulatorExecutor,
+                        get_executor)
+from .program import CompiledPlan, CompileError, CostEstimate, Program
+from .session import RunResult, Session
+from .strategy import (Strategy, StrategyError, data_parallel_strategy,
+                       weights_graph)
+
+# deprecation-friendly alias: the scenarios' old hand-rolled
+# "build tensors + plan_fused_bsr + est_time" dance, as one call
+estimate_switch = plan_tensor_switch
+
+__all__ = [
+    "DG", "DS", "DUP", "PARTIAL", "HSPMD", "replicated", "spmd",
+    "CommPlan", "CompileError", "CompiledPlan", "CostEstimate",
+    "DeductionError", "DeductionReport", "ExecItem", "ExecutableGraph",
+    "Executor", "Graph", "JaxExecutor", "NvlinkIbTopology", "Pipeline",
+    "Program", "RunResult", "Session", "ShardedTensor",
+    "SimulatorExecutor", "SpecializationResult", "Strategy",
+    "StrategyError", "SwitchOutcome", "SwitchReport", "Topology",
+    "UniformTopology", "data_parallel_strategy", "estimate_switch",
+    "gather", "get_executor", "plan_tensor_switch", "resolve", "scatter",
+    "weights_graph",
+]

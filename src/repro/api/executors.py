@@ -1,0 +1,145 @@
+"""Pluggable executors: run a CompiledPlan's per-device ExecItems.
+
+The :class:`Executor` protocol is the seam between planning and
+execution.  Two implementations ship:
+
+* :class:`SimulatorExecutor` — interprets the specialized per-device
+  programs with numpy over the virtual-device simulator
+  (``core.simulator``): compute ops apply the shared local semantics
+  (``core.op_semantics``) shard-by-shard, CommOps run ``apply_plan``.
+  Works for any device count, no accelerator needed — the executable
+  specification.
+* :class:`JaxExecutor` — lowers the whole graph (compute AND comm) into
+  one ``jax.shard_map`` program on real devices
+  (``runtime.program.LoweredGraph``) and caches the compiled program per
+  (strategy, fetches).  Bit-exactness against the SimulatorExecutor is
+  what ``runtime.selftest`` checks on 2/4/8 forced CPU devices.
+
+Both take and return ``{name: ShardedTensor}`` — per-device shards under
+the strategy's deduced annotations — so results are comparable
+shard-by-shard, bitwise.  Output dtypes follow one shared rule
+(``op_semantics.result_dtype``); bitwise parity is guaranteed for
+exactly-representable computations (the differential tests' integer-
+valued shards through dot/add/relu and all comm), while transcendental
+kernels (gelu) may differ in the final ulp between numpy and XLA.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.op_semantics import local_apply, result_dtype
+from repro.core.simulator import ShardedTensor, apply_plan
+
+from .program import CompiledPlan
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Anything that can run a CompiledPlan over sharded state."""
+
+    name: str
+
+    def run(self, compiled: CompiledPlan,
+            state: dict[str, ShardedTensor],
+            fetches: Sequence[str] | None = None
+            ) -> dict[str, ShardedTensor]:
+        """Execute; ``state`` maps every leaf tensor (placeholders and
+        parameters) to its ShardedTensor.  Returns the fetched tensors
+        (default: graph sinks) as ShardedTensors."""
+        ...
+
+
+class SimulatorExecutor:
+    """Numpy interpretation of the specialized per-device programs."""
+
+    name = "sim"
+
+    def run(self, compiled: CompiledPlan,
+            state: dict[str, ShardedTensor],
+            fetches: Sequence[str] | None = None
+            ) -> dict[str, ShardedTensor]:
+        graph, k = compiled.graph, compiled.strategy_index
+        shapes = compiled.shapes
+        plans = {id(rc.op): rc.plan for rc in
+                 compiled.specialization.resolved}
+        fetches = list(fetches or [t.name for t in graph.sinks()])
+        for f in fetches:  # fail up front, like LoweredGraph does
+            if f not in graph.tensors:
+                raise ValueError(f"unknown fetch tensor {f!r}")
+        env: dict[str, ShardedTensor] = {}
+        for op in graph.ops:
+            out_t = op.outputs[0] if op.outputs else None
+            if op.kind in ("placeholder", "parameter"):
+                if out_t.name not in state:
+                    raise ValueError(f"missing leaf tensor {out_t.name!r}")
+                env[out_t.name] = state[out_t.name]
+                continue
+            if op.kind == "comm":
+                env[out_t.name] = apply_plan(env[op.inputs[0].name],
+                                             plans[id(op)])
+                continue
+            annot = out_t.annots[k]
+            out_shape = shapes[out_t.name]
+            dtype = result_dtype(op.kind,
+                                 [env[t.name].dtype for t in op.inputs])
+            parts: dict[int, np.ndarray] = {}
+            for dev in annot.devices:
+                locs = [env[t.name].parts[dev] for t in op.inputs]
+                out_local = tuple(annot.device_shape(dev, out_shape))
+                parts[dev] = np.asarray(local_apply(
+                    op.kind, np, locs, op.attrs, out_local)).astype(
+                    dtype, copy=False)
+            env[out_t.name] = ShardedTensor(out_shape, annot, parts)
+        return {f: env[f] for f in fetches}
+
+
+class JaxExecutor:
+    """Real-device execution: one shard_map program per compiled plan."""
+
+    name = "jax"
+
+    def __init__(self, mesh=None, *, reduction: str = "exact"):
+        import weakref
+        self.mesh = mesh
+        self.reduction = reduction
+        # keyed by the CompiledPlan object itself (weakly, so dropped
+        # plans evict their traced programs and dead ids can't alias)
+        self._cache: "weakref.WeakKeyDictionary[CompiledPlan, dict]" = \
+            weakref.WeakKeyDictionary()
+
+    def lowered(self, compiled: CompiledPlan,
+                fetches: Sequence[str] | None = None):
+        """The (cached) LoweredGraph for this plan + fetch list."""
+        from repro.runtime.program import lower_graph
+        per_plan = self._cache.get(compiled)
+        if per_plan is None:
+            per_plan = self._cache[compiled] = {}
+        key = tuple(fetches) if fetches else None
+        lw = per_plan.get(key)
+        if lw is None:
+            lw = lower_graph(compiled.graph, compiled.strategy_index,
+                             shape_env=compiled.shape_env, mesh=self.mesh,
+                             topology=compiled.topology,
+                             reduction=self.reduction,
+                             fetches=list(fetches) if fetches else None)
+            per_plan[key] = lw
+        return lw
+
+    def run(self, compiled: CompiledPlan,
+            state: dict[str, ShardedTensor],
+            fetches: Sequence[str] | None = None
+            ) -> dict[str, ShardedTensor]:
+        return self.lowered(compiled, fetches).run(state)
+
+
+def get_executor(name: str, **kwargs) -> Executor:
+    """Executor registry: ``"sim"`` or ``"jax"`` (deprecation-friendly
+    string form used by CLI flags and old call sites)."""
+    if name == "sim":
+        return SimulatorExecutor()
+    if name == "jax":
+        return JaxExecutor(**kwargs)
+    raise ValueError(f"unknown executor {name!r} (have: sim, jax)")

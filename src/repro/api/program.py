@@ -1,0 +1,236 @@
+"""`Program`: one single-device graph + N strategies, compiled per strategy.
+
+``program.compile(strategy)`` runs the paper's full front half —
+annotation deduction (§5.2), hierarchical communication resolution (§4),
+progressive per-device specialization and pipeline construction
+(§5.3-5.4) — and returns a :class:`CompiledPlan`: per-device ExecItems,
+resolved comm plans, pipelines, and an analytic cost/roofline estimate.
+A CompiledPlan is inert data; executing it is an
+:class:`~repro.api.executors.Executor`'s job.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.core import op_semantics
+from repro.core.graph import DeductionReport, Graph
+from repro.core.plan import CommPlan
+from repro.core.specialize import (ExecItem, ExecutableGraph,
+                                   SpecializationResult, specialize_all)
+from repro.core.symbolic import bind_shape, free_symbols
+from repro.core.topology import Topology, UniformTopology
+
+from .strategy import Strategy, StrategyError
+
+
+class CompileError(ValueError):
+    pass
+
+
+# stable default so memoized compiles keyed on topology identity can hit
+_DEFAULT_TOPOLOGY = UniformTopology()
+
+
+@dataclass(frozen=True)
+class CostEstimate:
+    """Analytic cost terms of one compiled strategy (roofline inputs)."""
+
+    flops: int                      # global compute work
+    comm_bytes: int                 # bytes crossing device boundaries
+    comm_messages: int              # collective / p2p launches
+    est_comm_seconds: float         # priced on the strategy topology
+    per_kind_bytes: dict[str, int] = field(default_factory=dict)
+
+    def roofline_seconds(self, peak_flops: float) -> float:
+        """max(compute, comm) completion-time proxy at ``peak_flops``."""
+        return max(self.flops / max(peak_flops, 1.0),
+                   self.est_comm_seconds)
+
+    def summary(self) -> str:
+        kinds = ",".join(f"{k}:{v / 1e6:.2f}MB"
+                         for k, v in sorted(self.per_kind_bytes.items()))
+        return (f"{self.flops / 1e6:.2f} MFLOP, "
+                f"{self.comm_bytes / 1e6:.2f} MB comm in "
+                f"{self.comm_messages} msgs "
+                f"(~{self.est_comm_seconds * 1e3:.2f} ms) [{kinds}]")
+
+
+@dataclass(eq=False)  # identity semantics: executors cache per plan object
+class CompiledPlan:
+    """Result of ``Program.compile``: everything an Executor needs."""
+
+    graph: Graph
+    strategy: Strategy
+    strategy_index: int
+    shapes: dict[str, tuple[int, ...]]
+    shape_env: dict[str, int]
+    topology: Topology
+    specialization: SpecializationResult
+    cost: CostEstimate
+
+    @property
+    def devices(self) -> tuple[int, ...]:
+        return self.specialization.devices
+
+    @property
+    def comm_plans(self) -> list[CommPlan]:
+        return [rc.plan for rc in self.specialization.resolved]
+
+    def exec_items(self, device: int) -> list[ExecItem]:
+        """This device's executable graph (paper Fig 9)."""
+        return self.specialization.exec_graphs[device].items
+
+    def exec_graph(self, device: int) -> ExecutableGraph:
+        return self.specialization.exec_graphs[device]
+
+    def describe(self) -> str:
+        lines = [f"CompiledPlan[{self.strategy.name}] over "
+                 f"{len(self.devices)} device(s), "
+                 f"{len(self.specialization.pipelines)} pipeline(s)"]
+        for p in self.specialization.pipelines:
+            lines.append("  pipeline: " + " -> ".join(
+                str(sorted(s)) for s in p.stages))
+        for rc in self.specialization.resolved:
+            lines.append(f"  comm {rc.op.outputs[0].name}: {rc.plan.kind}")
+        lines.append("  cost: " + self.cost.summary())
+        return "\n".join(lines)
+
+
+def _estimate_cost(graph: Graph, shapes, resolved,
+                   topology: Topology) -> CostEstimate:
+    flops = 0
+    for op in graph.ops:
+        if op.kind in ("placeholder", "parameter", "comm"):
+            continue
+        flops += op_semantics.flops(
+            op.kind, [shapes[t.name] for t in op.inputs],
+            shapes[op.outputs[0].name], op.attrs)
+    comm_bytes = 0
+    messages = 0
+    est_s = 0.0
+    per_kind: dict[str, int] = {}
+    for rc in resolved:
+        plan = rc.plan
+        comm_bytes += plan.nbytes_moved()
+        messages += plan.message_count()
+        for step in plan.steps:
+            nb = step.nbytes_moved()
+            per_kind[step.kind] = per_kind.get(step.kind, 0) + nb
+            for g in step.groups:
+                worst = max((topology.time_for(s, d, nb)
+                             for s in g.srcs for d in g.dsts if s != d),
+                            default=0.0)
+                est_s += worst / max(len(step.groups), 1)
+    return CostEstimate(flops, comm_bytes, messages, est_s, per_kind)
+
+
+class Program:
+    """A single-device graph bound to N named strategies."""
+
+    def __init__(self, graph: Graph, strategies: Sequence[Strategy]):
+        import copy
+        if not strategies:
+            raise StrategyError("Program needs at least one strategy")
+        names = [s.name for s in strategies]
+        if len(set(names)) != len(names):
+            raise StrategyError(f"duplicate strategy names in {names}")
+        for s in strategies:
+            s.validate_against(graph)
+        # own a private copy: installing annotations must not corrupt a
+        # graph another Program (and its live Sessions) already wraps
+        self.graph = copy.deepcopy(graph)
+        self.strategies = list(strategies)
+        points = set()
+        for t in self.graph.annotation_points():
+            t.annots = [s.annots[t.name] for s in strategies]
+            points.add(id(t))
+        for t in self.graph.tensors.values():
+            if id(t) not in points:
+                # stale deduced annots from a prior deduce() would skew
+                # deduce's strategy count; they are recomputed anyway
+                t.annots = []
+        self.report: DeductionReport = self.graph.deduction_report()
+        self._compile_cache: dict[tuple, CompiledPlan] = {}
+
+    @classmethod
+    def from_annotated(cls, graph: Graph,
+                       names: Sequence[str] | None = None) -> "Program":
+        """Wrap a graph whose leaves already carry (multi-)annotations —
+        the pre-API construction style, kept importable as a shim."""
+        import copy
+        graph = copy.deepcopy(graph)
+        report = graph.deduction_report()  # deduces (once)
+        points = graph.annotation_points()
+        n = report.n_strategies
+        names = list(names or (f"s{i}" for i in range(n)))
+        if len(names) != n:
+            raise StrategyError(
+                f"{len(names)} names for {n} annotation strategies")
+        if len(set(names)) != len(names):
+            raise StrategyError(f"duplicate strategy names in {names}")
+        strategies = [
+            Strategy(names[k], {t.name: t.annots[k] for t in points})
+            for k in range(n)]
+        prog = cls.__new__(cls)
+        prog.graph = graph
+        prog.strategies = strategies
+        prog.report = report
+        prog._compile_cache = {}
+        return prog
+
+    # -- lookup ------------------------------------------------------------
+    @property
+    def names(self) -> list[str]:
+        return [s.name for s in self.strategies]
+
+    def index(self, strategy: "Strategy | str | int") -> int:
+        if isinstance(strategy, int):
+            if not 0 <= strategy < len(self.strategies):
+                raise StrategyError(f"strategy index {strategy} out of "
+                                    f"range; have {self.names}")
+            return strategy
+        name = strategy.name if isinstance(strategy, Strategy) else strategy
+        for i, s in enumerate(self.strategies):
+            if s.name == name:
+                return i
+        raise StrategyError(f"unknown strategy {name!r}; have {self.names}")
+
+    def strategy(self, strategy: "Strategy | str | int") -> Strategy:
+        return self.strategies[self.index(strategy)]
+
+    # -- compile -----------------------------------------------------------
+    def compile(self, strategy: "Strategy | str | int", *,
+                shape_env: dict[str, int] | None = None,
+                topology: Topology | None = None) -> CompiledPlan:
+        """Deduction -> comm resolution -> progressive specialization.
+
+        Memoized per (strategy, shape_env, topology): switching back to
+        an already-compiled strategy returns the SAME CompiledPlan object,
+        so executors keep their traced programs (JaxExecutor's cache is
+        keyed by plan identity — strategy flapping doesn't retrace).
+        """
+        k = self.index(strategy)
+        strat = self.strategies[k]
+        env = dict(shape_env or {})
+        topology = topology or strat.topology or _DEFAULT_TOPOLOGY
+        # id() is stable here: the cached plan keeps the topology alive
+        key = (k, tuple(sorted(env.items())), id(topology))
+        cached = self._compile_cache.get(key)
+        if cached is not None:
+            return cached
+        shapes: dict[str, tuple[int, ...]] = {}
+        for name, t in self.graph.tensors.items():
+            syms = free_symbols(t.shape)
+            if syms - set(env):
+                raise CompileError(
+                    f"tensor {name!r} has unbound symbolic dims "
+                    f"{sorted(syms - set(env))}; pass shape_env")
+            shapes[name] = bind_shape(t.shape, env)
+        spec = specialize_all(self.graph, k, topology, env)
+        cost = _estimate_cost(self.graph, shapes, spec.resolved, topology)
+        plan = CompiledPlan(self.graph, strat, k, shapes, env, topology,
+                            spec, cost)
+        self._compile_cache[key] = plan
+        return plan

@@ -1,0 +1,137 @@
+"""`Session`: live sharded state + execution + dynamic strategy switching.
+
+A Session owns the sharded weights of a Program under one active
+strategy, executes steps through a pluggable
+:class:`~repro.api.executors.Executor`, and — the paper's §6 headline —
+switches strategies *without restart*: ``session.switch(new_strategy)``
+re-shards every parameter through the fused-BSR migration plan and
+returns the :class:`~repro.core.switching.SwitchReport` (message counts,
+bytes over fast/slow links, planning + estimated transfer time).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.simulator import ShardedTensor, gather, scatter
+from repro.core.switching import SwitchReport
+from repro.core.switching import switch as core_switch
+from repro.core.topology import Topology
+
+from .executors import Executor, JaxExecutor, SimulatorExecutor
+from .program import CompiledPlan, Program
+from .strategy import Strategy
+
+
+@dataclass
+class RunResult:
+    """One step's fetched tensors, sharded per the active strategy."""
+
+    outputs: dict[str, ShardedTensor]
+
+    def shards(self, name: str) -> ShardedTensor:
+        return self.outputs[name]
+
+    def value(self, name: str, check_dups: bool = True) -> np.ndarray:
+        """Reconstruct the global value (asserts replicas agree)."""
+        return gather(self.outputs[name], check_dups=check_dups)
+
+    def values(self) -> dict[str, np.ndarray]:
+        return {name: self.value(name) for name in self.outputs}
+
+
+class Session:
+    """Live sharded state for one Program, on one Executor."""
+
+    def __init__(self, program: Program, strategy: "Strategy | str | int",
+                 *, executor: Executor | None = None,
+                 shape_env: dict[str, int] | None = None,
+                 topology: Topology | None = None, seed: int = 0):
+        self.program = program
+        self.executor: Executor = executor or SimulatorExecutor()
+        self.shape_env = dict(shape_env or {})
+        self.topology = topology
+        self.seed = seed
+        self.weights: dict[str, ShardedTensor] = {}
+        self.plan: CompiledPlan = program.compile(
+            strategy, shape_env=self.shape_env, topology=topology)
+
+    # -- state -------------------------------------------------------------
+    @property
+    def strategy(self) -> Strategy:
+        return self.plan.strategy
+
+    def _shard(self, name: str, value) -> ShardedTensor:
+        if isinstance(value, ShardedTensor):
+            return value
+        annot = self.program.graph.tensors[name].annots[
+            self.plan.strategy_index]
+        return scatter(np.asarray(value), annot,
+                       rng=np.random.default_rng(self.seed))
+
+    def load(self, values: Mapping[str, object]) -> None:
+        """Install parameter values (global arrays are scattered per the
+        active strategy; ShardedTensors are taken as-is)."""
+        params = {t.name for t in self.program.graph.parameters()}
+        for name, value in values.items():
+            if name not in params:
+                raise ValueError(f"{name!r} is not a parameter "
+                                 f"(have {sorted(params)})")
+            self.weights[name] = self._shard(name, value)
+
+    def weight_value(self, name: str) -> np.ndarray:
+        return gather(self.weights[name])
+
+    # -- execution ---------------------------------------------------------
+    def run(self, feeds: Mapping[str, object] | None = None,
+            fetches: Sequence[str] | None = None) -> RunResult:
+        """Execute one step: placeholders come from ``feeds`` (global
+        arrays or ShardedTensors), parameters from session state."""
+        feeds = dict(feeds or {})
+        state: dict[str, ShardedTensor] = {}
+        for t in self.program.graph.placeholders():
+            if t.name not in feeds:
+                raise ValueError(f"missing feed for placeholder {t.name!r}")
+            state[t.name] = self._shard(t.name, feeds.pop(t.name))
+        if feeds:
+            raise ValueError(f"unknown feeds {sorted(feeds)}")
+        for t in self.program.graph.parameters():
+            if t.name not in self.weights:
+                raise ValueError(
+                    f"parameter {t.name!r} not loaded; call session.load")
+            state[t.name] = self.weights[t.name]
+        outs = self.executor.run(self.plan, state, fetches)
+        return RunResult(outs)
+
+    # -- dynamic switching (§6) --------------------------------------------
+    def switch(self, strategy: "Strategy | str | int") -> SwitchReport:
+        """Fused-BSR migration of all weights to ``strategy``; the session
+        continues restart-free under the new compiled plan."""
+        dst = self.program.index(strategy)
+        src = self.plan.strategy_index
+        if dst == src:
+            from repro.core.bsr import BsrPlan
+            return SwitchReport(plan=BsrPlan([]), planning_seconds=0.0,
+                                est_transfer_seconds=0.0, total_bytes=0,
+                                message_count=0)
+        backend = "jax" if isinstance(self.executor, JaxExecutor) else "sim"
+        mesh = getattr(self.executor, "mesh", None)
+        missing = [t.name for t in self.program.graph.parameters()
+                   if t.name not in self.weights]
+        if missing:
+            raise ValueError(f"cannot switch with unloaded parameters "
+                             f"{missing}")
+        # same topology fallback as Program.compile: explicit session
+        # topology first, then the destination strategy's own
+        topology = self.topology or \
+            self.program.strategies[dst].topology
+        outcome = core_switch(
+            self.weights, self.program.graph, src, dst, self.shape_env,
+            topology, backend=backend, mesh=mesh)
+        self.weights = outcome.weights
+        self.plan = self.program.compile(dst, shape_env=self.shape_env,
+                                         topology=self.topology)
+        return outcome.report

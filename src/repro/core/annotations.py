@@ -47,8 +47,13 @@ def _norm_entries(entries: Iterable[tuple[int, int]]) -> tuple[tuple[int, int], 
             raise ValueError(f"invalid shard count {n} for dim {d}")
         if n == 1:
             continue  # trivial; canonical form omits it
-        if d in seen and d >= 0:
-            raise ValueError(f"dim {d} annotated twice")
+        if d in seen:
+            # duplicate DUP/PARTIAL entries are just as inconsistent as
+            # duplicate splits: get() would see only the first while
+            # num_devices multiplies both, silently corrupting the
+            # device -> shard decomposition
+            name = {DUP: "Duplicate", PARTIAL: "Partial"}.get(d, f"dim {d}")
+            raise ValueError(f"{name} annotated twice in DS entries")
         seen.add(d)
         out.append((d, n))
     return tuple(out)

@@ -302,25 +302,27 @@ class Graph:
         self.tensors[name] = t
         return t
 
-    def placeholder(self, name: str, shape, annots: Sequence[HSPMD]) -> Tensor:
+    def placeholder(self, name: str, shape,
+                    annots: Sequence[HSPMD] | None = None) -> Tensor:
         t = self._add_tensor(name, shape, annots)
         self.ops.append(Op("placeholder", [], [t]))
         t.producer = self.ops[-1]
         return t
 
-    def parameter(self, name: str, shape, annots: Sequence[HSPMD]) -> Tensor:
+    def parameter(self, name: str, shape,
+                  annots: Sequence[HSPMD] | None = None) -> Tensor:
         t = self._add_tensor(name, shape, annots)
         self.ops.append(Op("parameter", [], [t]))
         t.producer = self.ops[-1]
         return t
 
     # -- CommOp (§5.1) -------------------------------------------------------
-    def comm(self, x: Tensor, annots: Sequence[HSPMD] | HSPMD,
+    def comm(self, x: Tensor, annots: Sequence[HSPMD] | HSPMD | None = None,
              name: str | None = None) -> Tensor:
         if isinstance(annots, HSPMD):
             annots = [annots]
         name = name or f"{x.name}'"
-        out = self._add_tensor(name, x.shape, list(annots))
+        out = self._add_tensor(name, x.shape, list(annots or []))
         op = Op("comm", [x], [out], {"id": sum(1 for o in self.ops
                                                if o.kind == "comm") + 1})
         self.ops.append(op)
@@ -403,3 +405,51 @@ class Graph:
 
     def parameters(self) -> list[Tensor]:
         return [o.outputs[0] for o in self.ops if o.kind == "parameter"]
+
+    def placeholders(self) -> list[Tensor]:
+        return [o.outputs[0] for o in self.ops if o.kind == "placeholder"]
+
+    def annotation_points(self) -> list[Tensor]:
+        """Tensors that carry *explicit* (non-deduced) annotations: leaves
+        and CommOp outputs — exactly what a parallel-strategy bundle must
+        cover (paper §6.1's multiple-annotation binding sites)."""
+        return [o.outputs[0] for o in self.ops
+                if o.kind in ("placeholder", "parameter", "comm")]
+
+    def sinks(self) -> list[Tensor]:
+        """Tensors no op consumes — the program's default outputs."""
+        consumed = {id(t) for o in self.ops for t in o.inputs}
+        return [o.outputs[0] for o in self.ops
+                if o.outputs and id(o.outputs[0]) not in consumed]
+
+    def deduction_report(self) -> "DeductionReport":
+        """Run deduction and return a stable summary the API layer
+        composes (tensor/op counts, per-strategy device universes)."""
+        self.deduce()
+        n_strat = max((len(t.annots) for t in self.tensors.values()
+                       if t.annots), default=1)
+        devices = []
+        for k in range(n_strat):
+            devs: set[int] = set()
+            for t in self.tensors.values():
+                if t.annots:
+                    devs |= set(t.annots[k].devices)
+            devices.append(tuple(sorted(devs)))
+        return DeductionReport(
+            n_strategies=n_strat,
+            n_ops=len(self.ops),
+            n_comm_ops=len(self.comm_ops),
+            n_tensors=len(self.tensors),
+            devices=tuple(devices),
+        )
+
+
+@dataclass(frozen=True)
+class DeductionReport:
+    """Stable result of annotation deduction over a graph."""
+
+    n_strategies: int
+    n_ops: int
+    n_comm_ops: int
+    n_tensors: int
+    devices: tuple[tuple[int, ...], ...]  # per-strategy device universe

@@ -1,0 +1,75 @@
+"""Local shard semantics of compute operators.
+
+Progressive specialization (paper §5.3) turns every compute op into a
+*device-local* computation over local shards: elementwise ops apply
+pointwise, ``dot`` with a split contraction dim produces a Partial
+summand, ``sum`` over a split dim produces a summand, and so on — the
+annotation deduction rules (``core.graph.DEDUCTION_RULES``) guarantee
+the local results compose back into the global value.
+
+The kernels here are parameterized by the array namespace (``numpy`` for
+the virtual-device simulator executor, ``jax.numpy`` for the shard_map
+runtime) so both execution backends share ONE definition of what each
+op computes — the basis of the differential bit-exactness tests.
+"""
+
+from __future__ import annotations
+
+GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def result_dtype(kind: str, in_dtypes):
+    """The output dtype BOTH executors cast to: numpy promotion over the
+    inputs, widened to floating for transcendental kernels (numpy would
+    otherwise promote int inputs to float64 while jax stays in float32,
+    silently diverging the executors)."""
+    import numpy as np
+    dt = np.result_type(*in_dtypes)
+    if kind in ("gelu", "scale") and not np.issubdtype(dt, np.floating):
+        dt = np.dtype(np.float32)  # not result_type: int32+f32 -> f64
+    return dt
+
+
+def local_apply(kind: str, xp, ins, attrs, out_shape):
+    """Apply compute op ``kind`` to device-local input shards.
+
+    ``out_shape`` is the device-local output shape (needed by ``reshape``,
+    whose local target shape is annotation-dependent).
+    """
+    if kind == "gelu":
+        x = ins[0]
+        return 0.5 * x * (1.0 + xp.tanh(GELU_C * (x + 0.044715 * x * x * x)))
+    if kind == "relu":
+        return xp.maximum(ins[0], 0)
+    if kind == "scale":
+        return ins[0] * attrs.get("factor", 1.0)
+    if kind == "add":
+        return ins[0] + ins[1]
+    if kind == "mul":
+        return ins[0] * ins[1]
+    if kind == "dot":
+        return xp.matmul(ins[0], ins[1])
+    if kind == "sum":
+        return xp.sum(ins[0], axis=attrs["dim"])
+    if kind == "transpose":
+        return xp.transpose(ins[0], attrs["perm"])
+    if kind == "reshape":
+        return xp.reshape(ins[0], out_shape)
+    raise NotImplementedError(f"no local semantics for op kind {kind!r}")
+
+
+def flops(kind: str, in_shapes, out_shape, attrs) -> int:
+    """Analytic FLOP count of one (global) compute op — the compute term
+    of the roofline estimate attached to compiled plans."""
+    import math
+    numel = math.prod(out_shape) if out_shape else 0
+    if kind == "dot":
+        k = in_shapes[0][-1]
+        return 2 * numel * k
+    if kind == "sum":
+        return math.prod(in_shapes[0])
+    if kind in ("gelu",):
+        return 8 * numel
+    if kind in ("relu", "scale", "add", "mul"):
+        return numel
+    return 0  # transpose / reshape are data movement

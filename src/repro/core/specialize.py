@@ -52,8 +52,11 @@ class ExecutableGraph:
 
 
 def resolve_comm_ops(graph: Graph, strategy: int = 0,
-                     topology: Topology | None = None) -> list[ResolvedComm]:
+                     topology: Topology | None = None,
+                     shape_env: dict[str, int] | None = None
+                     ) -> list[ResolvedComm]:
     """Apply hierarchical communication resolution to every CommOp."""
+    from .symbolic import bind_shape
     topology = topology or UniformTopology()
     out = []
     for op in graph.comm_ops:
@@ -61,10 +64,12 @@ def resolve_comm_ops(graph: Graph, strategy: int = 0,
         dst = op.outputs[0].annots[strategy]
         shape = op.inputs[0].shape
         if not all(isinstance(s, int) for s in shape):
-            raise ValueError(
-                f"CommOp on {op.inputs[0].name} has symbolic shape; bind "
-                f"symbols before specialization")
-        plan = resolve(src, dst, tuple(shape), topology)
+            if shape_env is None:
+                raise ValueError(
+                    f"CommOp on {op.inputs[0].name} has symbolic shape; "
+                    f"bind symbols before specialization")
+            shape = bind_shape(shape, shape_env)
+        plan = resolve(src, dst, tuple(int(s) for s in shape), topology)
         out.append(ResolvedComm(op, plan))
     return out
 
@@ -74,10 +79,19 @@ def _device_in_annots(device: int, *annots: HSPMD) -> bool:
 
 
 def specialize(graph: Graph, device: int, strategy: int = 0,
-               topology: Topology | None = None) -> ExecutableGraph:
-    """Instantiate the executable graph for one device (paper Fig 9)."""
-    resolved = {id(rc.op): rc for rc in resolve_comm_ops(graph, strategy,
-                                                         topology)}
+               topology: Topology | None = None,
+               shape_env: dict[str, int] | None = None,
+               resolved_comms: list[ResolvedComm] | None = None
+               ) -> ExecutableGraph:
+    """Instantiate the executable graph for one device (paper Fig 9).
+
+    ``resolved_comms`` shares one communication resolution across the
+    per-device calls (``specialize_all`` passes it).
+    """
+    if resolved_comms is None:
+        resolved_comms = resolve_comm_ops(graph, strategy, topology,
+                                          shape_env)
+    resolved = {id(rc.op): rc for rc in resolved_comms}
     eg = ExecutableGraph(device)
     for op in graph.ops:
         annots = [t.annots[strategy] for t in op.inputs + op.outputs]
@@ -104,6 +118,43 @@ def specialize(graph: Graph, device: int, strategy: int = 0,
     return eg
 
 
+@dataclass
+class SpecializationResult:
+    """Stable result of progressive specialization across ALL devices —
+    what ``repro.api.Program.compile`` composes into a CompiledPlan."""
+
+    strategy: int
+    devices: tuple[int, ...]
+    exec_graphs: dict[int, ExecutableGraph]
+    resolved: list[ResolvedComm]
+    pipelines: list["Pipeline"]
+
+    def items(self, device: int) -> list[ExecItem]:
+        return self.exec_graphs[device].items
+
+
+def specialize_all(graph: Graph, strategy: int = 0,
+                   topology: Topology | None = None,
+                   shape_env: dict[str, int] | None = None
+                   ) -> SpecializationResult:
+    """Specialize every participating device, sharing one communication
+    resolution, and construct the pipelines (paper §5.3-5.4)."""
+    resolved = resolve_comm_ops(graph, strategy, topology, shape_env)
+    devices: set[int] = set()
+    for t in graph.tensors.values():
+        if t.annots:
+            devices |= set(t.annots[strategy].devices)
+    exec_graphs = {
+        dev: specialize(graph, dev, strategy, topology, shape_env,
+                        resolved_comms=resolved)
+        for dev in sorted(devices)}
+    pipelines = construct_pipelines(graph, strategy, topology=topology,
+                                    shape_env=shape_env,
+                                    resolved_comms=resolved)
+    return SpecializationResult(strategy, tuple(sorted(devices)),
+                                exec_graphs, resolved, pipelines)
+
+
 # ---------------------------------------------------------------------------
 # pipeline construction (paper §5.4)
 # ---------------------------------------------------------------------------
@@ -120,7 +171,10 @@ class Pipeline:
 
 def construct_pipelines(graph: Graph, strategy: int = 0,
                         scheduled_only: bool = True,
-                        topology: Topology | None = None) -> list[Pipeline]:
+                        topology: Topology | None = None,
+                        shape_env: dict[str, int] | None = None,
+                        resolved_comms: list[ResolvedComm] | None = None
+                        ) -> list[Pipeline]:
     """Step-by-step pipeline construction (Fig 9, bottom right).
 
     Every device starts as its own single-stage pipeline.  For each
@@ -147,7 +201,10 @@ def construct_pipelines(graph: Graph, strategy: int = 0,
 
     successors: list[tuple[int, int]] = []  # (src_dev, dst_dev) stage edges
 
-    for rc in resolve_comm_ops(graph, strategy, topology):
+    if resolved_comms is None:
+        resolved_comms = resolve_comm_ops(graph, strategy, topology,
+                                          shape_env)
+    for rc in resolved_comms:
         op = rc.op
         if scheduled_only:
             # one-shot CommOps feed parameters; scheduled ones feed

@@ -43,18 +43,12 @@ class SwitchReport:
                 f"est transfer {self.est_transfer_seconds * 1e3:.1f} ms")
 
 
-def plan_switch(graph: Graph, src_strategy: int, dst_strategy: int,
-                shape_env: dict[str, int] | None = None,
-                topology: Topology | None = None,
-                mode: str = "fused") -> SwitchReport:
-    """Plan the weight migration between two annotated strategies."""
-    from .symbolic import bind_shape
+def plan_tensor_switch(tensors, topology: Topology | None = None,
+                       mode: str = "fused") -> SwitchReport:
+    """Plan one global BSR migration over ``(name, src_annot, dst_annot,
+    shape, itemsize)`` tuples — the shared core of graph switching and the
+    scenario cost models (elastic / mixed-length)."""
     topology = topology or UniformTopology()
-    tensors = []
-    for p in graph.parameters():
-        shape = bind_shape(p.shape, shape_env or {})
-        tensors.append((p.name, p.annots[src_strategy],
-                        p.annots[dst_strategy], shape, 2))
     t0 = time.perf_counter()
     if mode == "fused":
         plan = plan_fused_bsr(tensors, topology)
@@ -78,12 +72,34 @@ def plan_switch(graph: Graph, src_strategy: int, dst_strategy: int,
     )
 
 
+def plan_switch(graph: Graph, src_strategy: int, dst_strategy: int,
+                shape_env: dict[str, int] | None = None,
+                topology: Topology | None = None,
+                mode: str = "fused", itemsize=2) -> SwitchReport:
+    """Plan the weight migration between two annotated strategies.
+
+    ``itemsize`` prices the byte/time statistics: an int (default 2 =
+    bf16, the paper's training dtype) or a per-tensor ``name -> int``
+    callable (``switch`` below passes the live weights' itemsizes).
+    """
+    from .symbolic import bind_shape
+    isz = itemsize if callable(itemsize) else (lambda name: itemsize)
+    tensors = []
+    for p in graph.parameters():
+        shape = bind_shape(p.shape, shape_env or {})
+        tensors.append((p.name, p.annots[src_strategy],
+                        p.annots[dst_strategy], shape, isz(p.name)))
+    return plan_tensor_switch(tensors, topology, mode)
+
+
 def execute_switch(weights: dict[str, ShardedTensor],
                    graph: Graph, src_strategy: int, dst_strategy: int,
                    shape_env: dict[str, int] | None = None,
                    topology: Topology | None = None, *,
                    backend: str = "sim", mesh=None,
-                   reduction: str = "exact") -> dict[str, ShardedTensor]:
+                   reduction: str = "exact",
+                   report: SwitchReport | None = None
+                   ) -> dict[str, ShardedTensor]:
     """Migrate weight shards to the destination strategy.
 
     Per-tensor plans share the fused global planning state; execution is
@@ -94,8 +110,9 @@ def execute_switch(weights: dict[str, ShardedTensor],
     from .symbolic import bind_shape
     if backend not in ("sim", "jax"):
         raise ValueError(f"unknown switch backend {backend!r}")
-    report = plan_switch(graph, src_strategy, dst_strategy, shape_env,
-                         topology, mode="fused")
+    if report is None:
+        report = plan_switch(graph, src_strategy, dst_strategy, shape_env,
+                             topology, mode="fused")
     by_tensor: dict[str, list] = {}
     for a in report.plan.assignments:
         by_tensor.setdefault(a.tensor, []).append(a)
@@ -115,3 +132,38 @@ def execute_switch(weights: dict[str, ShardedTensor],
         else:
             out[p.name] = apply_plan(weights[p.name], cp)
     return out
+
+
+@dataclass
+class SwitchOutcome:
+    """Stable result of a planned-and-executed strategy switch."""
+
+    weights: dict[str, ShardedTensor]
+    report: SwitchReport
+    src_strategy: int
+    dst_strategy: int
+
+
+def switch(weights: dict[str, ShardedTensor],
+           graph: Graph, src_strategy: int, dst_strategy: int,
+           shape_env: dict[str, int] | None = None,
+           topology: Topology | None = None, *,
+           backend: str = "sim", mesh=None,
+           reduction: str = "exact") -> SwitchOutcome:
+    """Plan + execute the fused-BSR strategy switch, returning both the
+    migrated weights and the planning/transfer report (paper §6.2) —
+    what ``repro.api.Session.switch`` composes.  Report statistics are
+    priced at each live weight's actual itemsize."""
+
+    def isz(name: str) -> int:
+        st = weights.get(name)
+        if st is None:
+            return 2
+        return np.asarray(next(iter(st.parts.values()))).dtype.itemsize
+
+    report = plan_switch(graph, src_strategy, dst_strategy, shape_env,
+                         topology, mode="fused", itemsize=isz)
+    new = execute_switch(weights, graph, src_strategy, dst_strategy,
+                         shape_env, topology, backend=backend, mesh=mesh,
+                         reduction=reduction, report=report)
+    return SwitchOutcome(new, report, src_strategy, dst_strategy)

@@ -46,6 +46,39 @@ def make_batch(corpus, cfg, batch, seq, rng):
     return out
 
 
+def strategy_report(params, mesh) -> None:
+    """Describe the run's weight placement through ``repro.api``: the
+    FSDP-style strategy over the mesh devices, plus the fused-BSR cost of
+    draining to half the cluster (the elastic-training transition this
+    driver would pay on a node failure)."""
+    import jax.tree_util as jtu
+
+    from repro import api
+
+    leaves = jtu.tree_flatten_with_path(params)[0]
+    shapes = {jtu.keystr(path): tuple(np.asarray(v).shape)
+              for path, v in leaves}
+    itemsizes = {jtu.keystr(path): np.asarray(v).dtype.itemsize
+                 for path, v in leaves}
+    devices = list(range(int(mesh.devices.size)))
+    full = api.data_parallel_strategy("fsdp", devices, shapes)
+    strategies = [full]
+    if len(devices) >= 2:
+        strategies.append(api.data_parallel_strategy(
+            "fsdp-half", devices[:len(devices) // 2], shapes))
+    prog = api.Program(api.weights_graph(shapes), strategies)
+    plan = prog.compile("fsdp")
+    print(f"placement[fsdp]: {len(shapes)} tensors over "
+          f"{len(plan.devices)} device(s)")
+    if len(devices) >= 2:
+        half = prog.strategy("fsdp-half")
+        report = api.estimate_switch(
+            [(n, full.annots[n], half.annots[n], shapes[n], itemsizes[n])
+             for n in shapes])
+        print(f"elastic drain to {len(devices) // 2} device(s): "
+              f"{report.summary()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -58,6 +91,11 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--strategy-report", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="print the repro.api weight-placement + elastic "
+                         "drain summary at startup (--no-strategy-report "
+                         "skips the deduction/BSR planning it costs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -68,6 +106,8 @@ def main():
 
     mesh = make_smoke_mesh()
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.strategy_report:
+        strategy_report(params, mesh)
     opt_state = init_opt_state(params)
     start = 0
     if args.resume:

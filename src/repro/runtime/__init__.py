@@ -11,15 +11,19 @@ all of it runs anywhere.
 """
 
 from .backend import (CompiledPlan, compile_plan, device_items,
-                      execute_plan, execute_sharded, resharding_fn)
+                      execute_graph, execute_plan, execute_sharded,
+                      resharding_fn)
 from .diff import differential_check, integer_decompose, roundtrip_check
 from .harness import ensure_host_devices, host_device_env, run_subprocess
-from .lowering import DeviceOrder, lower_plan, pad_shape
+from .lowering import (DeviceOrder, LoweringStats, PlanLowering, lower_plan,
+                       pad_shape)
+from .program import LoweredGraph, lower_graph
 
 __all__ = [
-    "CompiledPlan", "DeviceOrder", "compile_plan", "device_items",
-    "differential_check", "ensure_host_devices", "execute_plan",
+    "CompiledPlan", "DeviceOrder", "LoweredGraph", "LoweringStats",
+    "PlanLowering", "compile_plan", "device_items", "differential_check",
+    "ensure_host_devices", "execute_graph", "execute_plan",
     "execute_sharded", "host_device_env", "integer_decompose",
-    "lower_plan", "pad_shape", "resharding_fn", "roundtrip_check",
-    "run_subprocess",
+    "lower_graph", "lower_plan", "pad_shape", "resharding_fn",
+    "roundtrip_check", "run_subprocess",
 ]

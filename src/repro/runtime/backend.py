@@ -24,7 +24,8 @@ from repro.core.simulator import ShardedTensor
 from repro.core.specialize import ExecItem
 from repro.core.topology import Topology
 
-from .lowering import DeviceOrder, lower_plan, pad_shape
+from .lowering import (DeviceOrder, LoweringStats, lower_plan, pack_shards,
+                       pad_shape)
 
 
 def _default_mesh(n: int):
@@ -51,28 +52,13 @@ class CompiledPlan:
                 f"has only {self.n_mesh}; force more host devices (e.g. "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count="
                 f"{len(self.order)})")
+        self.stats = LoweringStats()
         self.fn = lower_plan(plan, self.shape, mesh, self.order,
-                             reduction=reduction)
+                             reduction=reduction, stats_out=self.stats)
 
     def _pack(self, parts: dict[int, np.ndarray]) -> np.ndarray:
-        src = self.plan.src
-        dtype = None
-        for dev in src.devices:
-            arr = np.asarray(parts[dev])
-            want = src.device_shape(dev, self.shape)
-            if tuple(arr.shape) != tuple(want):
-                raise ValueError(
-                    f"dev {dev}: shard shape {arr.shape} != {want} "
-                    f"expected by the source annotation")
-            dtype = arr.dtype if dtype is None else \
-                np.promote_types(dtype, arr.dtype)
-        stacked = np.zeros((self.n_mesh,) + pad_shape(src, self.shape),
-                           dtype=dtype)
-        for dev in src.devices:
-            arr = np.asarray(parts[dev])
-            stacked[(self.order.pos(dev),)
-                    + tuple(slice(0, s) for s in arr.shape)] = arr
-        return stacked
+        return pack_shards(parts, self.plan.src, self.shape, self.n_mesh,
+                           self.order)
 
     def _unpack(self, out: np.ndarray) -> dict[int, np.ndarray]:
         dst = self.plan.annots[-1]
@@ -138,6 +124,23 @@ def resharding_fn(src_annot: HSPMD, dst_annot: HSPMD, mesh=None, *,
 
     fn.plans = plans
     return fn
+
+
+def execute_graph(graph, strategy: int = 0, *, state=None, mesh=None,
+                  shape_env=None, topology=None, reduction: str = "exact",
+                  fetches=None) -> dict[str, ShardedTensor]:
+    """Execute a deduced graph's compute AND comm ExecItems end-to-end on
+    real devices under one ``shard_map`` program (see ``runtime.program``).
+
+    ``state`` maps every leaf tensor name (placeholders + parameters) to
+    its :class:`ShardedTensor`; returns the fetched tensors (default: the
+    graph's sinks) as ShardedTensors under their deduced annotations.
+    """
+    from .program import lower_graph
+    lowered = lower_graph(graph, strategy, shape_env=shape_env, mesh=mesh,
+                          topology=topology, reduction=reduction,
+                          fetches=fetches)
+    return lowered.run(state or {})
 
 
 def device_items(plan: CommPlan, device: int, name: str = "comm") -> list[ExecItem]:

@@ -5,9 +5,12 @@ compiles the *same* stage semantics into one ``jax.shard_map`` program over
 a 1-D device mesh, so every resolved communication operator actually moves
 tensors through XLA collectives:
 
-* copy groups (SR / AG / SplitAG / BSR) — one ``jax.lax.ppermute`` per
-  (src, dst) pair (XLA collective-permute; ppermute forbids duplicated
-  sources, so a multicast group is emitted as a pair per receiver),
+* copy groups (SR / AG / SplitAG / BSR) — point-to-point deliveries are
+  **fused into batched permutes**: all (src, dst) pairs of a stage are
+  packed into rounds (each source and each destination used at most once
+  per round) and every round becomes ONE ``jax.lax.ppermute`` over
+  padded slabs, instead of one collective launch per pair.  The static
+  round schedule is reported in :class:`LoweringStats`,
 * reduce groups (AR / RS / SplitAR / SplitRS) —
   - ``reduction="exact"``: ``jax.lax.all_gather`` of the masked per-source
     contributions, then a left fold in float64 following the group's
@@ -29,11 +32,17 @@ Because every device can hold a differently-shaped box (heterogeneous
 ``hsplits``), local shards are padded to the per-stage elementwise-max box
 shape; geometry is static, so stage coverage is checked at lowering time
 with the same strictness as the simulator.
+
+:class:`PlanLowering` is the reusable core: it applies one plan's stages
+to a device-local padded value *inside an enclosing shard_map body*, so
+the whole-graph executor (``runtime.program``) can interleave comm plans
+with per-device compute.  :func:`lower_plan` wraps it into a standalone
+jitted program.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -69,6 +78,45 @@ class DeviceOrder:
         return len(self.devices)
 
 
+@dataclass
+class LoweringStats:
+    """Static collective-launch accounting of one lowered plan."""
+
+    copy_pairs: int = 0      # point-to-point (src, dst) deliveries
+    ppermute_calls: int = 0  # batched permutes emitted after fusion
+    reduce_groups: int = 0   # all_gather / psum launches
+    stages: int = 0
+
+    def merge(self, other: "LoweringStats") -> None:
+        self.copy_pairs += other.copy_pairs
+        self.ppermute_calls += other.ppermute_calls
+        self.reduce_groups += other.reduce_groups
+        self.stages += other.stages
+
+
+def pack_shards(parts, annot: HSPMD, shape: tuple[int, ...], n_mesh: int,
+                order: DeviceOrder) -> np.ndarray:
+    """Stack per-device shards into the runtime's ``(n_mesh, *pad)``
+    buffer (each device's box zero-padded at the origin), validating
+    every shard's shape against the annotation and promoting dtypes."""
+    dtype = None
+    for dev in annot.devices:
+        arr = np.asarray(parts[dev])
+        want = annot.device_shape(dev, shape)
+        if tuple(arr.shape) != tuple(want):
+            raise ValueError(
+                f"dev {dev}: shard shape {arr.shape} != {want} "
+                f"expected by the annotation")
+        dtype = arr.dtype if dtype is None else \
+            np.promote_types(dtype, arr.dtype)
+    stacked = np.zeros((n_mesh,) + pad_shape(annot, shape), dtype=dtype)
+    for dev in annot.devices:
+        arr = np.asarray(parts[dev])
+        stacked[(order.pos(dev),)
+                + tuple(slice(0, s) for s in arr.shape)] = arr
+    return stacked
+
+
 def pad_shape(annot: HSPMD, shape: tuple[int, ...]) -> tuple[int, ...]:
     """Elementwise max of the per-device box shapes (uniform local buffer)."""
     dims = [1] * len(shape)
@@ -101,104 +149,183 @@ def check_stage_coverage(prev: HSPMD, nxt: HSPMD,
                 f"after stage [{kinds}]")
 
 
-def lower_plan(plan: CommPlan, shape: tuple[int, ...], mesh,
-               order: DeviceOrder | None = None, *,
-               reduction: str = "exact", dtype=None):
-    """Compile ``plan`` into a jitted ``f(stacked) -> stacked`` over ``mesh``.
+@dataclass
+class _Round:
+    """One batched permute: (src, dst) pairs with distinct srcs and dsts."""
 
-    ``stacked`` has shape ``(mesh_size, *pad_shape(plan.src))``: row
-    ``order.pos(dev)`` holds device ``dev``'s (zero-padded) local shard.
-    The result is stacked the same way under the final stage annotation.
+    pairs: list[tuple[int, int, object]] = field(default_factory=list)
+    srcs: set[int] = field(default_factory=set)
+    dsts: set[int] = field(default_factory=set)
+
+    def add(self, s: int, d: int, g) -> None:
+        self.pairs.append((s, d, g))
+        self.srcs.add(s)
+        self.dsts.add(d)
+
+
+def _fuse_rounds(pairs: list[tuple[int, int, object]]) -> list[_Round]:
+    """Greedy round construction: each round uses every source and every
+    destination at most once (ppermute's partial-permutation contract)."""
+    rounds: list[_Round] = []
+    for s, d, g in pairs:
+        for r in rounds:
+            if s not in r.srcs and d not in r.dsts:
+                r.add(s, d, g)
+                break
+        else:
+            r = _Round()
+            r.add(s, d, g)
+            rounds.append(r)
+    return rounds
+
+
+class PlanLowering:
+    """Applies one CommPlan's stages to a device-local padded value inside
+    an enclosing ``shard_map`` body.
+
+    All geometry (boxes, fusion rounds, coverage) is computed and checked
+    statically at construction; :meth:`apply` only emits traced ops.
     """
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
 
-    if reduction not in REDUCTIONS:
-        raise ValueError(f"reduction must be one of {REDUCTIONS}")
-    if plan.src is None:
-        raise ValueError("plan has no source annotation")
-    order = order or DeviceOrder.for_plan(plan)
-    axis = mesh.axis_names[0]
-    n_mesh = int(mesh.devices.size)
-    if n_mesh < len(order):
-        raise ValueError(
-            f"plan spans {len(order)} logical devices but mesh has only "
-            f"{n_mesh}; force more host devices (e.g. "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{len(order)})")
+    def __init__(self, plan: CommPlan, shape: tuple[int, ...],
+                 order: DeviceOrder, axis: str, n_mesh: int, *,
+                 reduction: str = "exact"):
+        if reduction not in REDUCTIONS:
+            raise ValueError(f"reduction must be one of {REDUCTIONS}")
+        if plan.src is None:
+            raise ValueError("plan has no source annotation")
+        if n_mesh < len(order):
+            raise ValueError(
+                f"plan spans {len(order)} logical devices but mesh has "
+                f"only {n_mesh}; force more host devices (e.g. "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{len(order)})")
+        self.plan = plan
+        self.shape = tuple(shape)
+        self.order = order
+        self.axis = axis
+        self.n_mesh = n_mesh
+        self.reduction = reduction
+        self.stats = LoweringStats()
+        self.has_reduce = any(g.reduce for s in plan.steps for g in s.groups)
 
-    has_reduce = any(g.reduce for s in plan.steps for g in s.groups)
+        # static geometry per stage, verified up front; copy deliveries
+        # fused into batched-permute rounds
+        self._stage_rounds: list[list[_Round]] = []
+        prev = plan.src
+        for stage in plan.stages:
+            deliveries = [(g.box, g.dsts) for step in stage.steps
+                          for g in step.groups]
+            pairs = []
+            for step in stage.steps:
+                for g in step.groups:
+                    for s in g.srcs:
+                        sbox = prev.device_box(s, self.shape)
+                        if not box_contains(sbox, g.box):
+                            raise AssertionError(
+                                f"src dev {s} box {sbox} does not contain "
+                                f"group box {g.box}")
+                    if g.reduce:
+                        self.stats.reduce_groups += 1
+                        continue
+                    src = g.srcs[0]
+                    for d in g.dsts:
+                        if d != src:
+                            pairs.append((src, d, g))
+            kinds = "+".join(st.kind for st in stage.steps)
+            check_stage_coverage(prev, stage.annot_after, deliveries,
+                                 self.shape, kinds)
+            rounds = _fuse_rounds(pairs)
+            self._stage_rounds.append(rounds)
+            self.stats.copy_pairs += len(pairs)
+            self.stats.ppermute_calls += len(rounds)
+            self.stats.stages += 1
+            prev = stage.annot_after
 
-    # static geometry per stage, verified up front
-    prev = plan.src
-    for stage in plan.stages:
-        deliveries = [(g.box, g.dsts) for step in stage.steps
-                      for g in step.groups]
-        for step in stage.steps:
-            for g in step.groups:
-                for s in g.srcs:
-                    sbox = prev.device_box(s, shape)
-                    if not box_contains(sbox, g.box):
-                        raise AssertionError(
-                            f"src dev {s} box {sbox} does not contain "
-                            f"group box {g.box}")
-        kinds = "+".join(st.kind for st in stage.steps)
-        check_stage_coverage(prev, stage.annot_after, deliveries, shape,
-                             kinds)
-        prev = stage.annot_after
+    # -- traced emission ---------------------------------------------------
 
-    def _emit_copy(x, g, prev_annot, i):
+    def _emit_rounds(self, x, rounds: list[_Round], prev_annot, i):
+        """Emit the stage's fused permutes; returns, per copy group, the
+        received piece expression valid on each destination device."""
+        import jax
+        import jax.numpy as jnp
+
+        received: dict[tuple[int, int], object] = {}  # (dst, id(g)) -> arr
+        for r in rounds:
+            pad = tuple(max(box_shape(g.box)[d] for _, _, g in r.pairs)
+                        for d in range(len(self.shape)))
+            operand = jnp.zeros(pad, x.dtype)
+            for s, _, g in r.pairs:  # each src appears once per round
+                sl = rel_slices(prev_annot.device_box(s, self.shape), g.box)
+                val = jnp.zeros(pad, x.dtype).at[
+                    tuple(slice(0, n) for n in box_shape(g.box))].set(x[sl])
+                operand = jnp.where(i == self.order.pos(s), val, operand)
+            perm = [(self.order.pos(s), self.order.pos(d))
+                    for s, d, _ in r.pairs]
+            out = jax.lax.ppermute(operand, self.axis, perm)
+            for _, d, g in r.pairs:
+                received[(d, id(g))] = out[
+                    tuple(slice(0, n) for n in box_shape(g.box))]
+        return received
+
+    def _emit_copy_piece(self, x, g, prev_annot, i, received):
+        import jax.numpy as jnp
+
         src = g.srcs[0]
-        src_pos = order.pos(src)
-        sl = rel_slices(prev_annot.device_box(src, shape), g.box)
-        operand = jnp.where(i == src_pos, x[sl], jnp.zeros_like(x[sl]))
-        received = jnp.zeros_like(operand)
+        bshape = box_shape(g.box)
+        piece = jnp.zeros(bshape, x.dtype)
         for d in g.dsts:
             if d == src:
-                continue
-            received = received + jax.lax.ppermute(
-                operand, axis, [(src_pos, order.pos(d))])
-        return jnp.where(i == src_pos, operand, received)
+                val = x[rel_slices(prev_annot.device_box(src, self.shape),
+                                   g.box)]
+            else:
+                val = received[(d, id(g))]
+            piece = jnp.where(i == self.order.pos(d), val, piece)
+        return piece
 
-    def _emit_reduce(x, g, prev_annot, i):
+    def _emit_reduce(self, x, g, prev_annot, i):
+        import jax
+        import jax.numpy as jnp
+
         # per-source contribution: each source extracts its own slice of
         # the group box (offsets differ per source), everyone else is zero
-        branch_of_pos = [0] * n_mesh
+        branch_of_pos = [0] * self.n_mesh
         extracts = [None]
         for s in g.srcs:
-            branch_of_pos[order.pos(s)] = len(extracts)
-            extracts.append(rel_slices(prev_annot.device_box(s, shape),
-                                       g.box))
+            branch_of_pos[self.order.pos(s)] = len(extracts)
+            extracts.append(rel_slices(
+                prev_annot.device_box(s, self.shape), g.box))
         gshape = box_shape(g.box)
         branches = [lambda v: jnp.zeros(gshape, v.dtype)]
         for sl in extracts[1:]:
             branches.append(lambda v, sl=sl: v[sl])
         tbl = jnp.asarray(branch_of_pos, jnp.int32)
         contrib = jax.lax.switch(tbl[i], branches, x)
-        if reduction == "fast":
-            return jax.lax.psum(contrib, axis)
-        gathered = jax.lax.all_gather(contrib.astype(jnp.float64), axis)
-        acc = gathered[order.pos(g.srcs[0])]
+        if self.reduction == "fast":
+            return jax.lax.psum(contrib, self.axis)
+        gathered = jax.lax.all_gather(contrib.astype(jnp.float64), self.axis)
+        acc = gathered[self.order.pos(g.srcs[0])]
         for s in g.srcs[1:]:
-            acc = acc + gathered[order.pos(s)]
+            acc = acc + gathered[self.order.pos(s)]
         return acc
 
-    def _stage_update(x, pieces, prev_annot, next_annot, i, out_dtype):
-        next_pad = pad_shape(next_annot, shape)
+    def _stage_update(self, x, pieces, prev_annot, next_annot, i, out_dtype):
+        import jax
+        import jax.numpy as jnp
+
+        next_pad = pad_shape(next_annot, self.shape)
 
         def branch_for(pos):
-            if pos >= len(order) or \
-                    order.devices[pos] not in next_annot.devices:
+            if pos >= len(self.order) or \
+                    self.order.devices[pos] not in next_annot.devices:
                 return lambda v: jnp.zeros(next_pad, out_dtype)
-            dev = order.devices[pos]
-            nbox = next_annot.device_box(dev, shape)
+            dev = self.order.devices[pos]
+            nbox = next_annot.device_box(dev, self.shape)
 
             def build(v):
                 arr = jnp.zeros(next_pad, out_dtype)
                 if dev in prev_annot.devices:
-                    pbox = prev_annot.device_box(dev, shape)
+                    pbox = prev_annot.device_box(dev, self.shape)
                     inter = box_intersect(pbox, nbox)
                     if inter is not None:
                         arr = arr.at[rel_slices(nbox, inter)].set(
@@ -215,37 +342,74 @@ def lower_plan(plan: CommPlan, shape: tuple[int, ...], mesh,
 
             return build
 
-        return jax.lax.switch(i, [branch_for(p) for p in range(n_mesh)], x)
+        return jax.lax.switch(i, [branch_for(p) for p in range(self.n_mesh)],
+                              x)
 
-    def body(block):
-        x = block[0]
-        out_dtype = dtype or x.dtype
-        i = jax.lax.axis_index(axis)
-        prev_annot = plan.src
-        for stage in plan.stages:
+    def apply(self, x, i, out_dtype=None):
+        """Run the plan's stages on local padded value ``x`` (this device's
+        shard at the origin); ``i`` is the traced mesh axis index."""
+        out_dtype = out_dtype or x.dtype
+        prev_annot = self.plan.src
+        for stage, rounds in zip(self.plan.stages, self._stage_rounds):
+            received = self._emit_rounds(x, rounds, prev_annot, i)
             pieces = []
             for step in stage.steps:
                 for g in step.groups:
-                    emit = _emit_reduce if g.reduce else _emit_copy
-                    pieces.append((g.box, emit(x, g, prev_annot, i), g.dsts))
-            x = _stage_update(x, pieces, prev_annot, stage.annot_after, i,
-                              out_dtype)
+                    if g.reduce:
+                        piece = self._emit_reduce(x, g, prev_annot, i)
+                    else:
+                        piece = self._emit_copy_piece(x, g, prev_annot, i,
+                                                      received)
+                    pieces.append((g.box, piece, g.dsts))
+            x = self._stage_update(x, pieces, prev_annot, stage.annot_after,
+                                   i, out_dtype)
             prev_annot = stage.annot_after
-        return x[None]
+        return x
+
+
+def maybe_x64(fn, needs_x64: bool):
+    """Wrap ``fn`` in a thread-local x64 scope when the exact float64 fold
+    is traced (keyed into the jit cache; process defaults untouched)."""
+    if not needs_x64:
+        return fn
+    from jax.experimental import enable_x64
+
+    def run_x64(*args):
+        with enable_x64():
+            return fn(*args)
+
+    return run_x64
+
+
+def lower_plan(plan: CommPlan, shape: tuple[int, ...], mesh,
+               order: DeviceOrder | None = None, *,
+               reduction: str = "exact", dtype=None,
+               stats_out: LoweringStats | None = None):
+    """Compile ``plan`` into a jitted ``f(stacked) -> stacked`` over ``mesh``.
+
+    ``stacked`` has shape ``(mesh_size, *pad_shape(plan.src))``: row
+    ``order.pos(dev)`` holds device ``dev``'s (zero-padded) local shard.
+    The result is stacked the same way under the final stage annotation.
+    """
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    order = order or DeviceOrder.for_plan(plan)
+    axis = mesh.axis_names[0]
+    n_mesh = int(mesh.devices.size)
+    lowering = PlanLowering(plan, shape, order, axis, n_mesh,
+                            reduction=reduction)
+    if stats_out is not None:
+        stats_out.merge(lowering.stats)
+
+    def body(block):
+        x = block[0]
+        i = jax.lax.axis_index(axis)
+        return lowering.apply(x, i, dtype or x.dtype)[None]
 
     rank = len(shape)
     spec = P(axis, *([None] * rank))
     jitted = jax.jit(shard_map(body, mesh=mesh, in_specs=spec,
                                out_specs=spec, check_rep=False))
-    if has_reduce and reduction == "exact":
-        # the exact fold traces in float64; scope x64 to this program
-        # (thread-local, keyed into the jit cache) instead of flipping
-        # the process-global default dtypes
-        from jax.experimental import enable_x64
-
-        def run_x64(stacked):
-            with enable_x64():
-                return jitted(stacked)
-
-        return run_x64
-    return jitted
+    return maybe_x64(jitted, lowering.has_reduce and reduction == "exact")

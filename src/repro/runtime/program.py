@@ -1,0 +1,215 @@
+"""Whole-graph execution on real devices: compute + comm ExecItems.
+
+``runtime.lowering`` executes a single CommPlan; this module lowers an
+entire deduced :class:`~repro.core.graph.Graph` — every compute op AND
+every resolved CommOp — into ONE ``jax.shard_map`` program over a 1-D
+device mesh, so a progressively-specialized pipeline stage runs
+end-to-end on real devices (paper §5.3-5.4):
+
+* each tensor lives as a stacked ``(mesh, *padded_local)`` buffer whose
+  row ``order.pos(dev)`` holds device ``dev``'s local shard at the
+  origin (heterogeneous ``hsplits`` boxes are zero-padded to the
+  per-tensor elementwise-max box shape),
+* a compute op becomes a ``jax.lax.switch`` over ``axis_index`` whose
+  branches are the *per-device* local computations — each branch slices
+  its device's exact local input shapes, applies the shared local
+  semantics (``core.op_semantics.local_apply``), and re-pads.  A device
+  outside the op's output annotation gets a zero branch: non-local
+  operator removal, executed literally,
+* a CommOp applies its resolved plan's stages via
+  :class:`~repro.runtime.lowering.PlanLowering` (fused batched permutes,
+  exact or fast reductions) on the same buffers.
+
+The per-device programs are exactly the ExecItem lists progressive
+specialization produces (``core.specialize.specialize``); the
+SimulatorExecutor interprets the same items with numpy, which is what the
+differential tests compare against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.op_semantics import local_apply, result_dtype
+from repro.core.simulator import ShardedTensor
+from repro.core.specialize import resolve_comm_ops
+from repro.core.symbolic import bind_shape
+from repro.core.topology import Topology
+
+from .lowering import (DeviceOrder, LoweringStats, PlanLowering, maybe_x64,
+                       pack_shards, pad_shape)
+
+
+class LoweredGraph:
+    """A deduced graph + strategy compiled to one shard_map program,
+    reusable over fresh shard values without retracing."""
+
+    def __init__(self, graph: Graph, strategy: int = 0, *,
+                 shape_env: dict[str, int] | None = None, mesh=None,
+                 topology: Topology | None = None,
+                 reduction: str = "exact", fetches=None):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        self.graph = graph
+        self.k = strategy
+        env = shape_env or {}
+        self.shapes = {name: bind_shape(t.shape, env)
+                       for name, t in graph.tensors.items()}
+        resolved = resolve_comm_ops(graph, strategy, topology, shape_env)
+        self._plans = {id(rc.op): rc.plan for rc in resolved}
+
+        devs: set[int] = set()
+        for t in graph.tensors.values():
+            if t.annots:
+                devs |= set(t.annots[strategy].devices)
+        for plan in self._plans.values():
+            for annot in plan.annots:
+                devs |= set(annot.devices)
+        self.order = DeviceOrder(tuple(sorted(devs)))
+
+        if mesh is None:
+            from repro.launch.mesh import make_runtime_mesh
+            mesh = make_runtime_mesh(len(self.order))
+        self.mesh = mesh
+        self.n_mesh = int(mesh.devices.size)
+        if self.n_mesh < len(self.order):
+            raise ValueError(
+                f"graph spans {len(self.order)} logical devices but mesh "
+                f"has only {self.n_mesh}; force more host devices (e.g. "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{len(self.order)})")
+        axis = mesh.axis_names[0]
+
+        self.leaves = [o.outputs[0] for o in graph.ops
+                       if o.kind in ("placeholder", "parameter")]
+        self.fetches = list(fetches or [t.name for t in graph.sinks()])
+        for f in self.fetches:
+            if f not in graph.tensors:
+                raise ValueError(f"unknown fetch tensor {f!r}")
+
+        self.stats = LoweringStats()
+        lowerings: dict[int, PlanLowering] = {}
+        has_reduce = False
+        for oid, plan in self._plans.items():
+            shape = self.shapes[plan_input_name(graph, oid)]
+            pl = PlanLowering(plan, shape, self.order, axis, self.n_mesh,
+                              reduction=reduction)
+            lowerings[oid] = pl
+            self.stats.merge(pl.stats)
+            has_reduce |= pl.has_reduce
+
+        k, order, n_mesh, shapes = strategy, self.order, self.n_mesh, \
+            self.shapes
+
+        def emit_compute(op, ins, i):
+            import jax.numpy as jnp
+            out_t = op.outputs[0]
+            annot = out_t.annots[k]
+            out_shape = shapes[out_t.name]
+            out_pad = pad_shape(annot, out_shape)
+            # shared promotion rule, matching the SimulatorExecutor
+            dtype = result_dtype(op.kind, [np.dtype(v.dtype) for v in ins])
+
+            def branch_for(pos):
+                if pos >= len(order) or \
+                        order.devices[pos] not in annot.devices:
+                    return lambda *vs: jnp.zeros(out_pad, dtype)
+                dev = order.devices[pos]
+                in_shapes = [t.annots[k].device_shape(dev, shapes[t.name])
+                             for t in op.inputs]
+                out_local = tuple(annot.device_shape(dev, out_shape))
+
+                def f(*vs):
+                    locs = [v[tuple(slice(0, s) for s in shp)]
+                            for v, shp in zip(vs, in_shapes)]
+                    y = local_apply(op.kind, jnp, locs, op.attrs, out_local)
+                    buf = jnp.zeros(out_pad, dtype)
+                    return buf.at[tuple(slice(0, s)
+                                        for s in y.shape)].set(
+                        y.astype(dtype))
+
+                return f
+
+            return jax.lax.switch(i, [branch_for(p) for p in range(n_mesh)],
+                                  *ins)
+
+        def body(*blocks):
+            i = jax.lax.axis_index(axis)
+            tenv = {t.name: b[0] for t, b in zip(self.leaves, blocks)}
+            for op in graph.ops:
+                if op.kind in ("placeholder", "parameter"):
+                    continue
+                out_name = op.outputs[0].name
+                if op.kind == "comm":
+                    x = tenv[op.inputs[0].name]
+                    tenv[out_name] = lowerings[id(op)].apply(x, i, x.dtype)
+                else:
+                    tenv[out_name] = emit_compute(
+                        op, [tenv[t.name] for t in op.inputs], i)
+            return tuple(tenv[f][None] for f in self.fetches)
+
+        in_specs = tuple(P(axis, *([None] * len(shapes[t.name])))
+                         for t in self.leaves)
+        out_specs = tuple(P(axis, *([None] * len(shapes[f])))
+                          for f in self.fetches)
+        jitted = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=False))
+        self.fn = maybe_x64(jitted, has_reduce and reduction == "exact")
+
+    # -- pack / unpack -----------------------------------------------------
+
+    def _pack(self, st: ShardedTensor, annot, shape) -> np.ndarray:
+        return pack_shards(st.parts, annot, shape, self.n_mesh, self.order)
+
+    def run(self, state: dict[str, ShardedTensor]
+            ) -> dict[str, ShardedTensor]:
+        """Execute once; ``state`` maps every leaf name (placeholder AND
+        parameter) to its ShardedTensor under the strategy annotation."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        axis = self.mesh.axis_names[0]
+        blocks = []
+        for t in self.leaves:
+            if t.name not in state:
+                raise ValueError(f"missing leaf tensor {t.name!r}")
+            annot = t.annots[self.k]
+            stacked = self._pack(state[t.name], annot, self.shapes[t.name])
+            spec = P(axis, *([None] * (stacked.ndim - 1)))
+            blocks.append(jax.device_put(
+                stacked, NamedSharding(self.mesh, spec)))
+        outs = self.fn(*blocks)
+
+        result: dict[str, ShardedTensor] = {}
+        for name, out in zip(self.fetches, outs):
+            annot = self.graph.tensors[name].annots[self.k]
+            shape = self.shapes[name]
+            arr = np.asarray(out)
+            parts = {
+                dev: arr[(self.order.pos(dev),)
+                         + tuple(slice(0, s)
+                                 for s in annot.device_shape(dev, shape))
+                         ].copy()
+                for dev in annot.devices}
+            result[name] = ShardedTensor(shape, annot, parts)
+        return result
+
+
+def plan_input_name(graph: Graph, op_id: int) -> str:
+    for op in graph.comm_ops:
+        if id(op) == op_id:
+            return op.inputs[0].name
+    raise KeyError(op_id)
+
+
+def lower_graph(graph: Graph, strategy: int = 0, *,
+                shape_env: dict[str, int] | None = None, mesh=None,
+                topology: Topology | None = None, reduction: str = "exact",
+                fetches=None) -> LoweredGraph:
+    """Compile a deduced graph for one strategy; see :class:`LoweredGraph`."""
+    return LoweredGraph(graph, strategy, shape_env=shape_env, mesh=mesh,
+                        topology=topology, reduction=reduction,
+                        fetches=fetches)

@@ -17,13 +17,30 @@ backend.  Emits one machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
 
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import re
 import sys
 import traceback
 
-from repro.runtime.harness import ensure_host_devices
+from repro.runtime.harness import FORCE_FLAG, ensure_host_devices
 
-ensure_host_devices(8)  # must precede any jax import
+_ap = argparse.ArgumentParser()
+_ap.add_argument("--devices", type=int, default=None,
+                 help="forced host device count; the sweep covers the "
+                      "2/4/8 tiers that fit (CI runs --devices 4). "
+                      "Defaults to an XLA_FLAGS force-count already in "
+                      "the environment (the harness's n_devices), else 8")
+_ARGS, _ = _ap.parse_known_args()
+if _ARGS.devices is None:
+    m = re.search(re.escape(FORCE_FLAG) + r"=(\d+)",
+                  os.environ.get("XLA_FLAGS", ""))
+    _ARGS.devices = int(m.group(1)) if m else 8
+if _ARGS.devices < 2:
+    _ap.error("--devices must be >= 2 (the smallest sweep tier)")
+
+ensure_host_devices(_ARGS.devices)  # must precede any jax import
 
 import numpy as np  # noqa: E402
 
@@ -85,7 +102,7 @@ def fig9_plan():
     return rc.plan, tuple(rc.op.inputs[0].shape)
 
 
-def run_all() -> dict:
+def run_all(max_devices: int = 8) -> dict:
     from repro.launch.mesh import make_runtime_mesh
     from repro.runtime.diff import (differential_check, integer_decompose,
                                     roundtrip_check)
@@ -102,7 +119,9 @@ def run_all() -> dict:
                 "error": f"{type(e).__name__}: {e}",
                 "trace": traceback.format_exc(limit=8)}
 
-    meshes = {n: make_runtime_mesh(n) for n in (2, 4, 8)}
+    meshes = {n: make_runtime_mesh(n) for n in (2, 4, 8)
+              if n <= max_devices}
+    big = max(meshes)
     rng = np.random.default_rng(0)
     value = rng.normal(size=SHAPE).astype(np.float32)
     ivalue = rng.integers(-8, 9, size=SHAPE).astype(np.float32)
@@ -122,13 +141,13 @@ def run_all() -> dict:
 
     # 2. fast psum reduction path (integer shards => order-insensitive)
     for kind in ("AR", "RS", "SplitAR", "SplitRS"):
-        src, dst = kind_cases(8)[kind]
+        src, dst = kind_cases(big)[kind]
         def fast(src=src, dst=dst):
             plan = differential_check(
-                ivalue, src, dst, meshes[8], reduction="fast",
+                ivalue, src, dst, meshes[big], reduction="fast",
                 decompose=integer_decompose)
             return {"step_kinds": [s.kind for s in plan.steps]}
-        record(f"fast:{kind}/8", fast)
+        record(f"fast:{kind}/{big}", fast)
 
     # 3. heterogeneous extras: non-uniform hsplits + Fig 9 multi-step stage
     def hsplits_case():
@@ -137,7 +156,8 @@ def run_all() -> dict:
         dst = spmd([0, 1, 2, 3], DS({0: 4}))
         plan = differential_check(value, src, dst, meshes[4])
         return {"plan_kind": plan.kind}
-    record("hetero:hsplits/4", hsplits_case)
+    if 4 in meshes:
+        record("hetero:hsplits/4", hsplits_case)
 
     def fig9_case():
         plan, shape = fig9_plan()
@@ -145,7 +165,8 @@ def run_all() -> dict:
         differential_check(v, plan.src, plan.dst, meshes[8], plan=plan)
         return {"plan_kind": plan.kind,
                 "step_kinds": [s.kind for s in plan.steps]}
-    record("hetero:fig9/7", fig9_case)
+    if 8 in meshes:
+        record("hetero:fig9/7", fig9_case)
 
     # 4. resharding round-trips (src -> dst -> src restores the shards)
     for n, mesh in meshes.items():
@@ -158,7 +179,8 @@ def run_all() -> dict:
         src = HSPMD(list(half), [DS({0: 2}), DS({0: 2})], hdim=0)
         dst = spmd([0, 1, 2, 3], DS({DUP: 4}))
         roundtrip_check(value, src, dst, meshes[4])
-    record("roundtrip:hetero/4", rt_hetero)
+    if 4 in meshes:
+        record("roundtrip:hetero/4", rt_hetero)
 
     # 5. dynamic-switch weight migration through the fused-BSR path
     def switch_case():
@@ -201,14 +223,87 @@ def run_all() -> dict:
         for name in values:
             for dev, arr in weights[name].parts.items():
                 np.testing.assert_array_equal(back[name].parts[dev], arr)
-    record("switch:jax/8", switch_case)
+    if 8 in meshes:
+        record("switch:jax/8", switch_case)
+
+    # 6. repro.api Session parity: a specialized pipeline stage's compute
+    #    + comm ExecItems end-to-end, SimulatorExecutor vs JaxExecutor
+    for n, mesh in meshes.items():
+        def session_case(n=n, mesh=mesh):
+            from repro import api
+
+            half = n // 2
+            s0, s1 = list(range(half)), list(range(half, n))
+            g = api.Graph()
+            g.placeholder("X", (8, 16))
+            g.parameter("W1", (16, 12))
+            h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"),
+                       name="H")
+            g.comm(h, name="H2")
+            g.parameter("W2", (12, 6))
+            g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+
+            col = DS({1: half}) if half > 1 else DS({})
+            row = DS({0: half}) if half > 1 else DS({})
+            strat = api.Strategy(f"pipe{n}", {
+                "X": spmd(s0, DS({DUP: half})),
+                "W1": spmd(s0, col),
+                "H2": spmd(s1, row),
+                "W2": spmd(s1, DS({DUP: half})),
+            })
+            prog = api.Program(g, [strat])
+
+            srng = np.random.default_rng(7)
+            xv = srng.integers(-4, 5, (8, 16)).astype(np.float32)
+            w1v = srng.integers(-4, 5, (16, 12)).astype(np.float32)
+            w2v = srng.integers(-4, 5, (12, 6)).astype(np.float32)
+            want = np.maximum(xv @ w1v, 0) @ w2v
+
+            outs = {}
+            for ex in (api.SimulatorExecutor(), api.JaxExecutor(mesh)):
+                sess = api.Session(prog, f"pipe{n}", executor=ex)
+                sess.load({"W1": w1v, "W2": w2v})
+                res = sess.run({"X": xv})
+                np.testing.assert_array_equal(res.value("Y"), want)
+                outs[ex.name] = res.shards("Y")
+            for dev, arr in outs["sim"].parts.items():
+                np.testing.assert_array_equal(
+                    outs["jax"].parts[dev], arr,
+                    err_msg=f"dev {dev}: jax executor differs from sim")
+            # the per-device programs really interleave compute and comm
+            plan = prog.compile(f"pipe{n}")
+            kinds = {i.role for d in plan.devices
+                     for i in plan.exec_items(d)}
+            assert kinds == {"compute", "comm"}, kinds
+            return {"devices": len(plan.devices)}
+        record(f"api:session/{n}", session_case)
+
+    # 7. batched-permute fusion: fewer collective launches than pairs,
+    #    same bits (the differential sweep above re-proves exactness)
+    def fusion_case():
+        from repro.core.comm_resolve import resolve
+        from repro.runtime.backend import compile_plan
+
+        src, dst = kind_cases(big)["AG"]
+        plan = resolve(src, dst, SHAPE)
+        cp = compile_plan(plan, SHAPE, meshes[big])
+        stats = cp.stats
+        assert stats.copy_pairs > 0 and \
+            stats.ppermute_calls < stats.copy_pairs, vars(stats)
+        out = cp({d: v for d, v in
+                  zip(range(big), np.split(value, big, axis=0))})
+        for dev in range(big):  # after AG every device holds the value
+            np.testing.assert_array_equal(out[dev], value)
+        return {"copy_pairs": stats.copy_pairs,
+                "ppermute_calls": stats.ppermute_calls}
+    record(f"fusion:stats/{big}", fusion_case)
 
     report["ok"] = all(c["ok"] for c in report["cases"].values())
     return report
 
 
 def main() -> int:
-    report = run_all()
+    report = run_all(max_devices=_ARGS.devices)
     for key, c in sorted(report["cases"].items()):
         status = "ok" if c["ok"] else f"FAIL: {c.get('error')}"
         print(f"  {key:24s} {status}")

@@ -19,10 +19,10 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-from repro.core.bsr import plan_fused_bsr, plan_unfused_bsr
 from repro.core.costmodel import (LLAMA_32B, ClusterSpec, ModelSpec,
                                   PipelineSpec, Stage, Strategy,
                                   best_uniform, paper_cluster, step_time)
+from repro.core.switching import plan_tensor_switch
 from repro.core.topology import NvlinkIbTopology
 from repro.scenarios.hetero import strategy_annotations
 
@@ -123,13 +123,11 @@ def run_trace(trace, cluster: ClusterSpec, model: ModelSpec = LLAMA_32B,
                          model.d_model)
                 tensors.append((f"layer{layer}", src_annots[layer],
                                 dst_annots[layer], shape, 2))
-            t0 = time.perf_counter()
-            plan = (plan_fused_bsr(tensors, topo) if mode == "fused"
-                    else plan_unfused_bsr(tensors, topo))
-            rep.switch_plan_s = time.perf_counter() - t0
-            rep.switch_transfer_s = plan.est_time(topo)
-            rep.total_bytes = plan.total_bytes()
-            rep.messages = plan.message_count()
+            sw = plan_tensor_switch(tensors, topo, mode=mode)
+            rep.switch_plan_s = sw.planning_seconds
+            rep.switch_transfer_s = sw.est_transfer_seconds
+            rep.total_bytes = sw.total_bytes
+            rep.messages = sw.message_count
         reports.append(rep)
         prev_strat = strat
     return reports

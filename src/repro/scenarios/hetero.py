@@ -91,6 +91,25 @@ def strategy_annotations(strat: Strategy, model: ModelSpec,
     return out
 
 
+def to_api_strategy(name: str, strat: Strategy, model: ModelSpec,
+                    shard_dim: int = 0, topology=None):
+    """Export a cost-model Strategy as a ``repro.api.Strategy`` over the
+    per-layer weight view (``layer{i}`` tensors) — the bridge that lets
+    ``api.Program`` / ``api.Session`` compile and switch the paper's
+    Table 5 strategies."""
+    from repro.api import Strategy as ApiStrategy
+    annots = {f"layer{i}": a for i, a in
+              strategy_annotations(strat, model, shard_dim).items()}
+    return ApiStrategy(name, annots, topology)
+
+
+def layer_weight_shapes(model: ModelSpec) -> dict[str, tuple[int, int]]:
+    """Flattened per-layer weight shapes matching ``to_api_strategy``."""
+    shape = (int(model.params_per_layer // model.d_model),
+             int(model.d_model))
+    return {f"layer{i}": shape for i in range(model.n_layers)}
+
+
 def grad_sync_annotations(strat: Strategy, model: ModelSpec) \
         -> dict[int, tuple[HSPMD, HSPMD]]:
     """(src, dst) annotation pairs for per-layer gradient sync: Partial

@@ -25,14 +25,14 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.bsr import plan_fused_bsr
 from repro.core.costmodel import (LLAMA_32B, ClusterSpec, ModelSpec,
                                   PipelineSpec, Stage, Strategy,
                                   paper_cluster, step_time)
+from repro.core.switching import plan_tensor_switch
 from repro.core.topology import NvlinkIbTopology
 from repro.data.pipeline import (Bucket, CorpusConfig, SyntheticCorpus,
                                  bucketize, step_stream)
-from repro.scenarios.hetero import strategy_annotations
+from repro.scenarios.hetero import layer_weight_shapes, strategy_annotations
 
 H20_RANKS = list(range(32))
 
@@ -154,13 +154,12 @@ def _strategy_step_time(cluster, model, strat, seqs, context, *,
 
 
 def _switch_cost(model, src: Strategy, dst: Strategy, topo) -> float:
-    tensors = []
+    shapes = layer_weight_shapes(model)
     sa = strategy_annotations(src, model)
     da = strategy_annotations(dst, model)
-    shape = (int(model.params_per_layer // model.d_model), model.d_model)
-    for layer in range(model.n_layers):
-        tensors.append((f"l{layer}", sa[layer], da[layer], shape, 2))
-    return plan_fused_bsr(tensors, topo).est_time(topo)
+    tensors = [(name, sa[layer], da[layer], shapes[name], 2)
+               for layer, name in enumerate(shapes)]
+    return plan_tensor_switch(tensors, topo).est_transfer_seconds
 
 
 def run_mixed_length(policy: str, *, context: int = 32768,

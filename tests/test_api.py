@@ -1,0 +1,354 @@
+"""The `repro.api` front door: Strategy validation, Program.compile,
+Session execution parity across executors, and dynamic switching.
+
+Multi-device JaxExecutor parity runs in the subprocess selftest
+(``api:session/{2,4,8}`` cases asserted in test_runtime.py); here the
+in-process tier covers planning, the SimulatorExecutor end-to-end, a
+single-device JaxExecutor parity check, and the validation surface.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+
+
+# ---------------------------------------------------------------------------
+# fixtures: the quickstart pipeline program
+# ---------------------------------------------------------------------------
+
+def pipeline_graph():
+    g = api.Graph()
+    g.placeholder("X", (8, 16))
+    g.parameter("W1", (16, 12))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"), name="H")
+    g.comm(h, name="H2")
+    g.parameter("W2", (12, 6))
+    g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+    return g
+
+
+def pipeline_strategies():
+    s0, s1 = [0, 1, 2, 3], [4, 5, 6, 7]
+    tp = api.Strategy("tp-pipeline", {
+        "X": api.spmd(s0, api.DS({api.DUP: 4})),
+        "W1": api.spmd(s0, api.DS({1: 4})),
+        "H2": api.spmd(s1, api.DS({0: 4})),
+        "W2": api.spmd(s1, api.DS({api.DUP: 4})),
+    })
+    dp = api.Strategy("dp", {
+        "X": api.spmd(s0, api.DS({0: 4})),
+        "W1": api.spmd(s0, api.DS({api.DUP: 4})),
+        "H2": api.spmd(s0, api.DS({0: 4})),
+        "W2": api.spmd(s0, api.DS({api.DUP: 4})),
+    })
+    return [tp, dp]
+
+
+def pipeline_values():
+    rng = np.random.default_rng(0)
+    xv = rng.integers(-4, 5, (8, 16)).astype(np.float32)
+    w1v = rng.integers(-4, 5, (16, 12)).astype(np.float32)
+    w2v = rng.integers(-4, 5, (12, 6)).astype(np.float32)
+    return xv, w1v, w2v, np.maximum(xv @ w1v, 0) @ w2v
+
+
+# ---------------------------------------------------------------------------
+# Strategy validation
+# ---------------------------------------------------------------------------
+
+def test_strategy_rejects_empty_name():
+    with pytest.raises(api.StrategyError, match="non-empty"):
+        api.Strategy("", {"W": api.spmd([0], api.DS({}))})
+
+
+def test_strategy_rejects_empty_bundle():
+    with pytest.raises(api.StrategyError, match="empty annotation"):
+        api.Strategy("s", {})
+
+
+def test_strategy_rejects_non_hspmd_annotation():
+    with pytest.raises(api.StrategyError, match="expected HSPMD"):
+        api.Strategy("s", {"W": api.DS({0: 2})})
+
+
+def test_strategy_rejects_bad_topology():
+    with pytest.raises(api.StrategyError, match="Topology"):
+        api.Strategy("s", {"W": api.spmd([0], api.DS({}))},
+                     topology="nvlink")
+
+
+def test_program_rejects_missing_annotation_point():
+    g = pipeline_graph()
+    incomplete = api.Strategy("partial", {
+        "X": api.spmd([0], api.DS({}))})
+    with pytest.raises(api.StrategyError, match="misses annotations"):
+        api.Program(g, [incomplete])
+
+
+def test_program_rejects_unknown_tensor_annotation():
+    g = api.Graph()
+    g.parameter("W", (4, 4))
+    typo = api.Strategy("s", {"W": api.spmd([0], api.DS({})),
+                              "Wv": api.spmd([0], api.DS({}))})
+    with pytest.raises(api.StrategyError, match="unknown tensors"):
+        api.Program(g, [typo])
+
+
+def test_program_rejects_duplicate_strategy_names():
+    g = api.Graph()
+    g.parameter("W", (4, 4))
+    s = api.Strategy("same", {"W": api.spmd([0], api.DS({}))})
+    with pytest.raises(api.StrategyError, match="duplicate"):
+        api.Program(g, [s, s])
+
+
+def test_program_rejects_unknown_strategy_lookup():
+    g = api.Graph()
+    g.parameter("W", (4, 4))
+    prog = api.Program(g, [api.Strategy(
+        "only", {"W": api.spmd([0], api.DS({}))})])
+    with pytest.raises(api.StrategyError, match="unknown strategy"):
+        prog.compile("nope")
+
+
+def test_ds_rejects_duplicate_special_entries():
+    """Regression: duplicate DUP/PARTIAL entries used to pass _norm_entries
+    silently (only d >= 0 was de-duped), corrupting num_devices."""
+    with pytest.raises(ValueError, match="Duplicate annotated twice"):
+        api.DS([(api.DUP, 2), (api.DUP, 2)])
+    with pytest.raises(ValueError, match="Partial annotated twice"):
+        api.DS([(api.PARTIAL, 2), (0, 2), (api.PARTIAL, 3)])
+    with pytest.raises(ValueError, match="dim 1 annotated twice"):
+        api.DS([(1, 2), (1, 2)])
+
+
+# ---------------------------------------------------------------------------
+# Program.compile on the quickstart hetero case
+# ---------------------------------------------------------------------------
+
+def test_compile_pipeline_plan():
+    prog = api.Program(pipeline_graph(), pipeline_strategies())
+    assert prog.report.n_strategies == 2
+    plan = prog.compile("tp-pipeline")
+    assert plan.devices == tuple(range(8))
+    # stage-0 device: compute then the P2P comm; stage-1: comm then compute
+    kinds0 = [i.kind for i in plan.exec_items(0)]
+    assert "dot" in kinds0 and "relu" in kinds0 and "BSR" in kinds0
+    roles5 = [i.role for i in plan.exec_items(5)]
+    assert set(roles5) == {"compute", "comm"}
+    # pipelines link stage 0 devices to the stage-1 group
+    assert all(len(p.stages) == 2 for p in plan.specialization.pipelines)
+    assert plan.cost.flops > 0
+    assert plan.cost.comm_messages > 0
+    assert "BSR" in plan.cost.per_kind_bytes
+    assert "tp-pipeline" in plan.describe()
+
+
+def test_compile_hetero_hsplits_strategy():
+    """The quickstart's heterogeneous annotation (3:1 hsplit) compiles."""
+    g = api.Graph()
+    g.parameter("W", (12, 8))
+    g.comm(g.tensors["W"], name="W2")
+    hetero = api.HSPMD(dgs=[[0, 1], [2]],
+                       dss=[api.DS({1: 2}), api.DS({})],
+                       hdim=0, hsplits=[3, 1])
+    strat = api.Strategy("hetero", {
+        "W": api.spmd([0, 1, 2], api.DS({0: 3})),
+        "W2": hetero,
+    })
+    plan = api.Program(g, [strat]).compile("hetero")
+    assert plan.comm_plans[0].kind == "fallback:BSR"
+    assert plan.devices == (0, 1, 2)
+
+
+def test_compile_symbolic_shape_requires_env():
+    from repro.core.symbolic import Sym
+    g = api.Graph()
+    g.parameter("W", (Sym("B"), 8))
+    prog = api.Program(g, [api.Strategy(
+        "s", {"W": api.spmd([0, 1], api.DS({1: 2}))})])
+    with pytest.raises(api.CompileError, match="unbound symbolic"):
+        prog.compile("s")
+    plan = prog.compile("s", shape_env={"B": 6})
+    assert plan.shapes["W"] == (6, 8)
+
+
+def test_program_clears_stale_deduced_annotations():
+    """Regression: wrapping a previously-deduced multi-strategy graph
+    with fewer Strategies must not inherit phantom strategies from stale
+    intermediate annotations."""
+    g = api.Graph()
+    g.parameter("W", (8, 4), [api.spmd([0, 1], api.DS({0: 2})),
+                              api.spmd([0, 1], api.DS({1: 2}))])
+    g.relu(g.tensors["W"], name="R")
+    g.deduce()
+    prog = api.Program(g, [api.Strategy(
+        "one", {"W": api.spmd([0], api.DS({}))})])
+    assert prog.report.n_strategies == 1
+    assert prog.compile("one").devices == (0,)
+
+
+def test_executors_share_result_dtype_rule():
+    """Regression: int inputs through gelu must yield the same (float32)
+    dtype on both executors instead of numpy promoting to float64 while
+    jax truncates back to int."""
+    from repro.core.op_semantics import result_dtype
+    assert result_dtype("gelu", [np.dtype(np.int32)]) == np.float32
+    assert result_dtype("dot", [np.dtype(np.float32)] * 2) == np.float32
+    g = api.Graph()
+    g.placeholder("X", (4,))
+    g.gelu(g.tensors["X"], name="Y")
+    prog = api.Program(g, [api.Strategy(
+        "s", {"X": api.spmd([0], api.DS({}))})])
+    sess = api.Session(prog, "s")
+    out = sess.run({"X": np.arange(4, dtype=np.int32)}).shards("Y")
+    assert out.parts[0].dtype == np.float32
+
+
+def test_from_annotated_shim():
+    """Pre-API graphs (leaves annotated directly) wrap into a Program."""
+    g = api.Graph()
+    g.parameter("W", (8, 8), [api.spmd([0, 1], api.DS({0: 2})),
+                              api.spmd([2, 3], api.DS({1: 2}))])
+    prog = api.Program.from_annotated(g, names=["old", "new"])
+    assert prog.names == ["old", "new"]
+    assert prog.compile("new").devices == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Session: run parity + switching numerics
+# ---------------------------------------------------------------------------
+
+def test_session_run_simulator():
+    prog = api.Program(pipeline_graph(), pipeline_strategies())
+    xv, w1v, w2v, want = pipeline_values()
+    sess = api.Session(prog, "tp-pipeline")
+    sess.load({"W1": w1v, "W2": w2v})
+    out = sess.run({"X": xv})
+    np.testing.assert_array_equal(out.value("Y"), want)
+    # shards actually live on the stage-1 devices, row-split
+    assert sorted(out.shards("Y").parts) == [4, 5, 6, 7]
+    assert out.shards("Y").parts[4].shape == (2, 6)
+
+
+def test_session_executor_parity_single_device():
+    """Sim vs jax executor, bit-exact — single device (the multi-device
+    2/4/8 sweep is the selftest's api:session cases)."""
+    g = api.Graph()
+    g.placeholder("X", (4, 8))
+    g.parameter("W", (8, 6))
+    g.dot(g.tensors["X"], g.tensors["W"], name="Y")
+    strat = api.Strategy("solo", {
+        "X": api.spmd([0], api.DS({})),
+        "W": api.spmd([0], api.DS({})),
+    })
+    prog = api.Program(g, [strat])
+    rng = np.random.default_rng(1)
+    xv = rng.integers(-4, 5, (4, 8)).astype(np.float32)
+    wv = rng.integers(-4, 5, (8, 6)).astype(np.float32)
+    outs = {}
+    for ex in (api.SimulatorExecutor(), api.JaxExecutor()):
+        sess = api.Session(prog, "solo", executor=ex)
+        sess.load({"W": wv})
+        outs[ex.name] = sess.run({"X": xv}).shards("Y").parts[0]
+    np.testing.assert_array_equal(outs["sim"], outs["jax"])
+    np.testing.assert_array_equal(outs["sim"], xv @ wv)
+
+
+def test_session_switch_numerics():
+    prog = api.Program(pipeline_graph(), pipeline_strategies())
+    xv, w1v, w2v, want = pipeline_values()
+    sess = api.Session(prog, "tp-pipeline")
+    sess.load({"W1": w1v, "W2": w2v})
+    report = sess.switch("dp")
+    assert report.message_count > 0
+    assert sess.strategy.name == "dp"
+    # weights re-sharded exactly; outputs unchanged under the new strategy
+    np.testing.assert_array_equal(sess.weight_value("W1"), w1v)
+    np.testing.assert_array_equal(sess.weight_value("W2"), w2v)
+    out = sess.run({"X": xv})
+    np.testing.assert_array_equal(out.value("Y"), want)
+    assert sorted(out.shards("Y").parts) == [0, 1, 2, 3]
+    # switching to the active strategy is a no-op
+    assert sess.switch("dp").message_count == 0
+
+
+def test_session_validates_feeds_and_weights():
+    prog = api.Program(pipeline_graph(), pipeline_strategies())
+    xv, w1v, w2v, _ = pipeline_values()
+    sess = api.Session(prog, "tp-pipeline")
+    with pytest.raises(ValueError, match="not a parameter"):
+        sess.load({"X": xv})
+    sess.load({"W1": w1v})
+    with pytest.raises(ValueError, match="not loaded"):
+        sess.run({"X": xv})
+    sess.load({"W2": w2v})
+    with pytest.raises(ValueError, match="missing feed"):
+        sess.run({})
+    with pytest.raises(ValueError, match="unknown feeds"):
+        sess.run({"X": xv, "Z": xv})
+    with pytest.raises(api.StrategyError, match="unknown strategy"):
+        sess.switch("never-registered")
+
+
+def test_weights_program_and_dp_strategy_helpers():
+    shapes = {"a": (8, 4), "b": (6, 2), "scalar": ()}
+    full = api.data_parallel_strategy("full", [0, 1, 2, 3], shapes)
+    half = api.data_parallel_strategy("half", [0, 1], shapes)
+    prog = api.Program(api.weights_graph(shapes), [full, half])
+    rng = np.random.default_rng(2)
+    values = {k: rng.normal(size=s).astype(np.float32)
+              for k, s in shapes.items()}
+    sess = api.Session(prog, "full")
+    sess.load(values)
+    report = sess.switch("half")
+    assert report.total_bytes > 0
+    for k, v in values.items():
+        np.testing.assert_allclose(sess.weight_value(k), v, atol=1e-6)
+
+
+def test_program_owns_a_graph_copy():
+    """Regression: a second Program over the same graph must not rebind
+    the first Program's annotations (live Sessions read them)."""
+    g = api.Graph()
+    g.parameter("W", (8, 4))
+    a = api.Strategy("A", {"W": api.spmd([0, 1], api.DS({0: 2}))})
+    b = api.Strategy("B", {"W": api.spmd([2, 3], api.DS({1: 2}))})
+    sess = api.Session(api.Program(g, [a]), "A")
+    wv = np.arange(32, dtype=np.float32).reshape(8, 4)
+    sess.load({"W": wv})
+    api.Program(g, [b])  # must not corrupt sess's placement
+    assert sorted(sess.weights["W"].parts) == [0, 1]
+    np.testing.assert_array_equal(sess.weight_value("W"), wv)
+    assert not g.tensors["W"].annots  # caller's graph left untouched
+
+
+def test_session_switch_uses_strategy_topology():
+    """Regression: SwitchReport must be priced on the strategy topology
+    (same fallback as Program.compile), not UniformTopology."""
+    topo = api.NvlinkIbTopology(gpus_per_node=2)
+    shapes = {"w": (16, 4)}
+    full = api.data_parallel_strategy("full", [0, 1, 2, 3], shapes,
+                                      topology=topo)
+    solo = api.data_parallel_strategy("solo", [0], shapes, topology=topo)
+    prog = api.Program(api.weights_graph(shapes), [full, solo])
+    sess = api.Session(prog, "full")
+    sess.load({"w": np.ones((16, 4), np.float32)})
+    report = sess.switch("solo")
+    # priced on the strategy topology AND the live float32 itemsize
+    want = api.estimate_switch(
+        [("w", full.annots["w"], solo.annots["w"], shapes["w"], 4)], topo)
+    assert report.est_transfer_seconds == \
+        pytest.approx(want.est_transfer_seconds)
+    assert report.total_bytes == want.total_bytes
+
+
+def test_estimate_switch_matches_session_report():
+    shapes = {"w": (16, 4)}
+    full = api.data_parallel_strategy("full", [0, 1, 2, 3], shapes)
+    solo = api.data_parallel_strategy("solo", [0], shapes)
+    report = api.estimate_switch(
+        [("w", full.annots["w"], solo.annots["w"], shapes["w"], 2)])
+    assert report.message_count == 3  # three shards converge on device 0
+    assert report.total_bytes == 3 * 4 * 4 * 2

@@ -81,6 +81,23 @@ def test_switch_migration_jax_backend(report):
     _case(report, "switch:jax/8")
 
 
+@pytest.mark.parametrize("ndev", NDEVS)
+def test_api_session_executor_parity(report, ndev):
+    """repro.api acceptance: Session.run on JaxExecutor executes a
+    specialized pipeline stage's compute + comm ExecItems end-to-end under
+    shard_map, bit-exact against SimulatorExecutor."""
+    case = _case(report, f"api:session/{ndev}")
+    assert case["devices"] == ndev
+
+
+def test_ppermute_fusion_reduces_launches(report):
+    """Per-(src,dst) ppermute pairs are fused into batched permutes: the
+    AG/8 multicast lowers to strictly fewer collective launches than
+    point-to-point pairs, same bits (the kind sweep re-proves exactness)."""
+    case = _case(report, "fusion:stats/8")
+    assert case["ppermute_calls"] < case["copy_pairs"], case
+
+
 # ---------------------------------------------------------------------------
 # in-process paths (single device / pure planning)
 # ---------------------------------------------------------------------------
@@ -158,6 +175,32 @@ def test_build_switch_step_sim_backend():
     step = build_switch_step(g, 0, 1)
     out = step(weights)
     np.testing.assert_allclose(gather(out["W"]), value, atol=1e-6)
+
+
+def test_fusion_round_schedule_is_valid_and_complete():
+    """Static check of the batched-permute schedule: every point-to-point
+    delivery lands in exactly one round, and no round reuses a source or
+    a destination (ppermute's partial-permutation contract)."""
+    from repro.core.comm_resolve import resolve
+    from repro.runtime.lowering import DeviceOrder, PlanLowering
+
+    src = spmd([0, 1, 2, 3], DS({0: 4}))
+    dst = spmd([0, 1, 2, 3], DS({DUP: 4}))  # AG: all-to-all multicast
+    plan = resolve(src, dst, (16, 8))
+    lowering = PlanLowering(plan, (16, 8), DeviceOrder.for_plan(plan),
+                            "dev", 4)
+    pairs = set()
+    for rounds in lowering._stage_rounds:
+        for r in rounds:
+            srcs = [s for s, _, _ in r.pairs]
+            dsts = [d for _, d, _ in r.pairs]
+            assert len(set(srcs)) == len(srcs), srcs
+            assert len(set(dsts)) == len(dsts), dsts
+            for s, d, g in r.pairs:
+                assert (s, d, id(g)) not in pairs
+                pairs.add((s, d, id(g)))
+    assert len(pairs) == lowering.stats.copy_pairs == 12  # 4 x 3 multicast
+    assert lowering.stats.ppermute_calls == 3  # fused to in-degree rounds
 
 
 def test_scatter_integer_decompose_partials_sum_exactly():
