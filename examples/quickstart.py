@@ -72,6 +72,20 @@ out = sess.run({"X": xv})
 np.testing.assert_allclose(out.value("Y"), want, atol=1e-5)
 print("post-switch output identical: OK")
 
+# --- 3b. microbatched pipeline execution (1F1B / GPipe) ---------------------
+print("\n=== 3b. pipeline schedules ===")
+sess.switch("tp-pipeline")    # back onto the 2-stage pipeline strategy
+out = sess.run({"X": xv}, num_microbatches=4, schedule="1f1b")
+np.testing.assert_allclose(out.value("Y"), want, atol=1e-5)
+print(out.schedule.describe())
+print("stats:", out.stats.summary())
+gp = sess.run({"X": xv}, num_microbatches=4, schedule="gpipe")
+np.testing.assert_allclose(gp.value("Y"), want, atol=1e-5)
+print("gpipe peak in-flight:",
+      [gp.schedule.peak_in_flight(s) for s in range(gp.schedule.n_stages)],
+      "vs 1f1b:",
+      [out.schedule.peak_in_flight(s) for s in range(out.schedule.n_stages)])
+
 # the gradient-sync pattern of heterogeneous DP (Fig 17) still one call:
 src = api.HSPMD(dgs=[[0, 1], [2]], dss=[api.DS({1: 2}), api.DS({})],
                 hdim=api.PARTIAL)

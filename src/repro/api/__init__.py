@@ -20,6 +20,9 @@ One coherent compile-and-run surface over the paper's abstractions::
     sess = api.Session(prog, "tp", executor=api.JaxExecutor())
     sess.load({"W": w_value})
     out = sess.run({"X": x_value})        # one shard_map program (§5.3)
+    out = sess.run({"X": x_value},        # microbatched 1F1B pipeline
+                   num_microbatches=4,    #   over plan.pipelines (§5.4)
+                   schedule="1f1b")
     report = sess.switch("dp")            # fused-BSR, restart-free (§6.2)
 
 Executors are pluggable (:class:`Executor`): ``SimulatorExecutor`` runs
@@ -35,7 +38,10 @@ from repro.core.annotations import (DG, DS, DUP, PARTIAL, HSPMD, replicated,
                                     spmd)
 from repro.core.comm_resolve import resolve
 from repro.core.graph import DeductionError, DeductionReport, Graph
+from repro.core.op_semantics import MicrobatchError
 from repro.core.plan import CommPlan
+from repro.core.schedule import (PipelineSchedule, ScheduleError,
+                                 ScheduleStats, Tick, build_schedule)
 from repro.core.simulator import ShardedTensor, gather, scatter
 from repro.core.specialize import (ExecItem, ExecutableGraph, Pipeline,
                                    SpecializationResult)
@@ -59,11 +65,12 @@ __all__ = [
     "DG", "DS", "DUP", "PARTIAL", "HSPMD", "replicated", "spmd",
     "CommPlan", "CompileError", "CompiledPlan", "CostEstimate",
     "DeductionError", "DeductionReport", "ExecItem", "ExecutableGraph",
-    "Executor", "Graph", "JaxExecutor", "NvlinkIbTopology", "Pipeline",
-    "Program", "RunResult", "Session", "ShardedTensor",
-    "SimulatorExecutor", "SpecializationResult", "Strategy",
-    "StrategyError", "SwitchOutcome", "SwitchReport", "Topology",
-    "UniformTopology", "data_parallel_strategy", "estimate_switch",
-    "gather", "get_executor", "plan_tensor_switch", "resolve", "scatter",
-    "weights_graph",
+    "Executor", "Graph", "JaxExecutor", "MicrobatchError",
+    "NvlinkIbTopology", "Pipeline", "PipelineSchedule", "Program",
+    "RunResult", "ScheduleError", "ScheduleStats", "Session",
+    "ShardedTensor", "SimulatorExecutor", "SpecializationResult",
+    "Strategy", "StrategyError", "SwitchOutcome", "SwitchReport", "Tick",
+    "Topology", "UniformTopology", "build_schedule",
+    "data_parallel_strategy", "estimate_switch", "gather", "get_executor",
+    "plan_tensor_switch", "resolve", "scatter", "weights_graph",
 ]

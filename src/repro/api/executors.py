@@ -22,6 +22,16 @@ shard-by-shard, bitwise.  Output dtypes follow one shared rule
 exactly-representable computations (the differential tests' integer-
 valued shards through dot/add/relu and all comm), while transcendental
 kernels (gelu) may differ in the final ulp between numpy and XLA.
+
+Microbatched pipeline execution (``Session.run(num_microbatches=m)``)
+goes through :meth:`run_schedule`: the SimulatorExecutor *interprets the
+1F1B/GPipe timetable tick by tick* — each forward tick executes exactly
+the ops progressive specialization assigned to that pipeline stage, for
+that microbatch, so an unexecutable schedule fails loudly — while the
+JaxExecutor lowers all microbatches into ONE shard_map program
+(``lax.scan`` over the microbatch axis; XLA's dependence order realizes
+the same pipeline).  Both return *per-microbatch* outputs; the Session
+combines them with one shared reduction rule.
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ from typing import Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core.op_semantics import local_apply, result_dtype
+from repro.core.schedule import PipelineSchedule, ScheduleError, assign_stages
 from repro.core.simulator import ShardedTensor, apply_plan
 
 from .program import CompiledPlan
@@ -51,49 +62,125 @@ class Executor(Protocol):
         (default: graph sinks) as ShardedTensors."""
         ...
 
+    def run_schedule(self, compiled: CompiledPlan,
+                     schedule: PipelineSchedule,
+                     states: Sequence[dict[str, ShardedTensor]],
+                     fetches: Sequence[str] | None = None
+                     ) -> list[dict[str, ShardedTensor]]:
+        """Execute a microbatched pipeline schedule over the MICRO plan
+        (``Program.compile_micro``); ``states[j]`` holds microbatch
+        ``j``'s leaves.  Returns per-microbatch fetches, in order."""
+        ...
+
+
+def _check_fetches(compiled: CompiledPlan, fetches) -> list[str]:
+    graph = compiled.graph
+    fetches = list(fetches or [t.name for t in graph.sinks()])
+    for f in fetches:  # fail up front, like LoweredGraph does
+        if f not in graph.tensors:
+            raise ValueError(f"unknown fetch tensor {f!r}")
+    return fetches
+
 
 class SimulatorExecutor:
     """Numpy interpretation of the specialized per-device programs."""
 
     name = "sim"
 
+    def _exec_op(self, op, env: dict[str, ShardedTensor],
+                 compiled: CompiledPlan, plans: dict) -> None:
+        out_t = op.outputs[0]
+        if op.kind == "comm":
+            env[out_t.name] = apply_plan(env[op.inputs[0].name],
+                                         plans[id(op)])
+            return
+        k = compiled.strategy_index
+        annot = out_t.annots[k]
+        out_shape = compiled.shapes[out_t.name]
+        dtype = result_dtype(op.kind,
+                             [env[t.name].dtype for t in op.inputs])
+        parts: dict[int, np.ndarray] = {}
+        for dev in annot.devices:
+            locs = [env[t.name].parts[dev] for t in op.inputs]
+            out_local = tuple(annot.device_shape(dev, out_shape))
+            parts[dev] = np.asarray(local_apply(
+                op.kind, np, locs, op.attrs, out_local)).astype(
+                dtype, copy=False)
+        env[out_t.name] = ShardedTensor(out_shape, annot, parts)
+
+    def _leaf_env(self, compiled: CompiledPlan,
+                  state: dict[str, ShardedTensor]
+                  ) -> dict[str, ShardedTensor]:
+        env: dict[str, ShardedTensor] = {}
+        for op in compiled.graph.ops:
+            if op.kind in ("placeholder", "parameter"):
+                name = op.outputs[0].name
+                if name not in state:
+                    raise ValueError(f"missing leaf tensor {name!r}")
+                env[name] = state[name]
+        return env
+
     def run(self, compiled: CompiledPlan,
             state: dict[str, ShardedTensor],
             fetches: Sequence[str] | None = None
             ) -> dict[str, ShardedTensor]:
-        graph, k = compiled.graph, compiled.strategy_index
-        shapes = compiled.shapes
+        fetches = _check_fetches(compiled, fetches)
         plans = {id(rc.op): rc.plan for rc in
                  compiled.specialization.resolved}
-        fetches = list(fetches or [t.name for t in graph.sinks()])
-        for f in fetches:  # fail up front, like LoweredGraph does
-            if f not in graph.tensors:
-                raise ValueError(f"unknown fetch tensor {f!r}")
-        env: dict[str, ShardedTensor] = {}
-        for op in graph.ops:
-            out_t = op.outputs[0] if op.outputs else None
-            if op.kind in ("placeholder", "parameter"):
-                if out_t.name not in state:
-                    raise ValueError(f"missing leaf tensor {out_t.name!r}")
-                env[out_t.name] = state[out_t.name]
-                continue
-            if op.kind == "comm":
-                env[out_t.name] = apply_plan(env[op.inputs[0].name],
-                                             plans[id(op)])
-                continue
-            annot = out_t.annots[k]
-            out_shape = shapes[out_t.name]
-            dtype = result_dtype(op.kind,
-                                 [env[t.name].dtype for t in op.inputs])
-            parts: dict[int, np.ndarray] = {}
-            for dev in annot.devices:
-                locs = [env[t.name].parts[dev] for t in op.inputs]
-                out_local = tuple(annot.device_shape(dev, out_shape))
-                parts[dev] = np.asarray(local_apply(
-                    op.kind, np, locs, op.attrs, out_local)).astype(
-                    dtype, copy=False)
-            env[out_t.name] = ShardedTensor(out_shape, annot, parts)
+        env = self._leaf_env(compiled, state)
+        for op in compiled.graph.ops:
+            if op.kind not in ("placeholder", "parameter"):
+                self._exec_op(op, env, compiled, plans)
         return {f: env[f] for f in fetches}
+
+    def run_schedule(self, compiled: CompiledPlan,
+                     schedule: PipelineSchedule,
+                     states: Sequence[dict[str, ShardedTensor]],
+                     fetches: Sequence[str] | None = None
+                     ) -> list[dict[str, ShardedTensor]]:
+        """Interpret the timetable: each forward tick runs exactly the
+        ops of its pipeline stage for its microbatch (backward ticks are
+        schedule structure only — the graph IR is forward-mode).  A
+        schedule that violates dataflow (a stage ticking before its
+        producer stage) fails on the missing input."""
+        if len(states) != schedule.num_microbatches:
+            raise ScheduleError(
+                f"{len(states)} microbatch states for a "
+                f"{schedule.num_microbatches}-microbatch schedule")
+        if schedule.n_stages != compiled.n_stages:
+            raise ScheduleError(
+                f"schedule has {schedule.n_stages} stage(s) but the plan "
+                f"has {compiled.n_stages}")
+        fetches = _check_fetches(compiled, fetches)
+        graph, k = compiled.graph, compiled.strategy_index
+        plans = {id(rc.op): rc.plan for rc in
+                 compiled.specialization.resolved}
+        stage_of = assign_stages(graph, k,
+                                 compiled.specialization.pipelines)
+        ops_by_stage: dict[int, list] = {}
+        for op in graph.ops:
+            if op.kind in ("placeholder", "parameter"):
+                continue
+            ops_by_stage.setdefault(stage_of[id(op)], []).append(op)
+        envs = [self._leaf_env(compiled, st) for st in states]
+        ran = [0] * len(states)
+        for tick in schedule.ticks:          # already (slot, stage) sorted
+            if tick.phase != "fwd":
+                continue
+            env = envs[tick.microbatch]
+            for op in ops_by_stage.get(tick.stage, ()):
+                try:
+                    self._exec_op(op, env, compiled, plans)
+                except KeyError as e:
+                    raise ScheduleError(
+                        f"stage {tick.stage} ran before its input "
+                        f"{e} was produced (invalid schedule)") from None
+                ran[tick.microbatch] += 1
+        n_ops = sum(len(v) for v in ops_by_stage.values())
+        if any(r != n_ops for r in ran):
+            raise ScheduleError(
+                f"schedule executed {ran} of {n_ops} ops per microbatch")
+        return [{f: env[f] for f in fetches} for env in envs]
 
 
 class JaxExecutor:
@@ -111,20 +198,22 @@ class JaxExecutor:
             weakref.WeakKeyDictionary()
 
     def lowered(self, compiled: CompiledPlan,
-                fetches: Sequence[str] | None = None):
+                fetches: Sequence[str] | None = None,
+                num_microbatches: int = 1):
         """The (cached) LoweredGraph for this plan + fetch list."""
         from repro.runtime.program import lower_graph
         per_plan = self._cache.get(compiled)
         if per_plan is None:
             per_plan = self._cache[compiled] = {}
-        key = tuple(fetches) if fetches else None
+        key = (tuple(fetches) if fetches else None, num_microbatches)
         lw = per_plan.get(key)
         if lw is None:
             lw = lower_graph(compiled.graph, compiled.strategy_index,
                              shape_env=compiled.shape_env, mesh=self.mesh,
                              topology=compiled.topology,
                              reduction=self.reduction,
-                             fetches=list(fetches) if fetches else None)
+                             fetches=list(fetches) if fetches else None,
+                             num_microbatches=num_microbatches)
             per_plan[key] = lw
         return lw
 
@@ -134,12 +223,36 @@ class JaxExecutor:
             ) -> dict[str, ShardedTensor]:
         return self.lowered(compiled, fetches).run(state)
 
+    def run_schedule(self, compiled: CompiledPlan,
+                     schedule: PipelineSchedule,
+                     states: Sequence[dict[str, ShardedTensor]],
+                     fetches: Sequence[str] | None = None
+                     ) -> list[dict[str, ShardedTensor]]:
+        """All microbatches in ONE shard_map program: the body scans over
+        the stacked microbatch axis, keeping the per-device ``lax.switch``
+        branches of the unpipelined path.  The explicit timetable is the
+        simulator's contract; on real devices XLA's dependence order
+        realizes the same pipeline, so the schedule only sizes the
+        program here."""
+        if len(states) != schedule.num_microbatches:
+            raise ScheduleError(
+                f"{len(states)} microbatch states for a "
+                f"{schedule.num_microbatches}-microbatch schedule")
+        lw = self.lowered(compiled, fetches,
+                          num_microbatches=len(states))
+        return lw.run_microbatches(list(states))
+
 
 def get_executor(name: str, **kwargs) -> Executor:
     """Executor registry: ``"sim"`` or ``"jax"`` (deprecation-friendly
-    string form used by CLI flags and old call sites)."""
+    string form used by CLI flags and old call sites).  Unknown options
+    raise ``TypeError`` instead of vanishing silently."""
     if name == "sim":
+        if kwargs:
+            raise TypeError(
+                f"SimulatorExecutor takes no options; got "
+                f"{sorted(kwargs)}")
         return SimulatorExecutor()
     if name == "jax":
-        return JaxExecutor(**kwargs)
+        return JaxExecutor(**kwargs)  # unknown kwargs raise TypeError
     raise ValueError(f"unknown executor {name!r} (have: sim, jax)")

@@ -17,6 +17,8 @@ from typing import Sequence
 from repro.core import op_semantics
 from repro.core.graph import DeductionReport, Graph
 from repro.core.plan import CommPlan
+from repro.core.schedule import (PipelineSchedule, build_schedule,
+                                 microbatch_graph, microbatch_roles)
 from repro.core.specialize import (ExecItem, ExecutableGraph,
                                    SpecializationResult, specialize_all)
 from repro.core.symbolic import bind_shape, free_symbols
@@ -69,10 +71,32 @@ class CompiledPlan:
     topology: Topology
     specialization: SpecializationResult
     cost: CostEstimate
+    # set on micro-plans (Program.compile_micro): how many microbatches the
+    # shapes were scaled down by, and each tensor's microbatch role
+    num_microbatches: int = 1
+    mb_roles: dict[str, int] | None = None
+    _schedules: dict = field(default_factory=dict, repr=False)
 
     @property
     def devices(self) -> tuple[int, ...]:
         return self.specialization.devices
+
+    @property
+    def n_stages(self) -> int:
+        """Pipeline depth of this strategy (1 when nothing is staged)."""
+        return max((len(p.stages)
+                    for p in self.specialization.pipelines), default=1)
+
+    def schedule(self, num_microbatches: int,
+                 kind: str = "1f1b") -> PipelineSchedule:
+        """The explicit (slot, stage, microbatch, phase) timetable this
+        plan's pipelines follow for ``num_microbatches`` (memoized)."""
+        key = (num_microbatches, kind)
+        cached = self._schedules.get(key)
+        if cached is None:
+            cached = self._schedules[key] = build_schedule(
+                self.n_stages, num_microbatches, kind)
+        return cached
 
     @property
     def comm_plans(self) -> list[CommPlan]:
@@ -220,17 +244,54 @@ class Program:
         cached = self._compile_cache.get(key)
         if cached is not None:
             return cached
+        plan = self._compile_graph(self.graph, k, env, topology)
+        self._compile_cache[key] = plan
+        return plan
+
+    def compile_micro(self, strategy: "Strategy | str | int",
+                      num_microbatches: int, *,
+                      shape_env: dict[str, int] | None = None,
+                      topology: Topology | None = None) -> CompiledPlan:
+        """Compile the ONE-MICROBATCH plan: every Split-role shape scaled
+        by ``1/num_microbatches`` (``core.schedule.microbatch_graph``),
+        re-specialized so comm plans and exec items carry microbatch
+        geometry.  Memoized like :meth:`compile`; ``num_microbatches=1``
+        is exactly the full plan."""
+        k = self.index(strategy)
+        if num_microbatches < 1:
+            raise CompileError(
+                f"num_microbatches must be >= 1 (got {num_microbatches})")
+        if num_microbatches == 1:
+            return self.compile(strategy, shape_env=shape_env,
+                                topology=topology)
+        strat = self.strategies[k]
+        env = dict(shape_env or {})
+        topology = topology or strat.topology or _DEFAULT_TOPOLOGY
+        key = (k, tuple(sorted(env.items())), id(topology),
+               num_microbatches)
+        cached = self._compile_cache.get(key)
+        if cached is not None:
+            return cached
+        roles = microbatch_roles(self.graph)
+        micro = microbatch_graph(self.graph, num_microbatches, roles,
+                                 shape_env=env)
+        plan = self._compile_graph(micro, k, env, topology)
+        plan.num_microbatches = num_microbatches
+        plan.mb_roles = roles
+        self._compile_cache[key] = plan
+        return plan
+
+    def _compile_graph(self, graph: Graph, k: int, env: dict[str, int],
+                       topology: Topology) -> CompiledPlan:
         shapes: dict[str, tuple[int, ...]] = {}
-        for name, t in self.graph.tensors.items():
+        for name, t in graph.tensors.items():
             syms = free_symbols(t.shape)
             if syms - set(env):
                 raise CompileError(
                     f"tensor {name!r} has unbound symbolic dims "
                     f"{sorted(syms - set(env))}; pass shape_env")
             shapes[name] = bind_shape(t.shape, env)
-        spec = specialize_all(self.graph, k, topology, env)
-        cost = _estimate_cost(self.graph, shapes, spec.resolved, topology)
-        plan = CompiledPlan(self.graph, strat, k, shapes, env, topology,
-                            spec, cost)
-        self._compile_cache[key] = plan
-        return plan
+        spec = specialize_all(graph, k, topology, env)
+        cost = _estimate_cost(graph, shapes, spec.resolved, topology)
+        return CompiledPlan(graph, self.strategies[k], k, shapes, env,
+                            topology, spec, cost)

@@ -16,6 +16,9 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.core.schedule import (SCHEDULES, PipelineSchedule,
+                                 ScheduleError, ScheduleStats,
+                                 combine_outputs)
 from repro.core.simulator import ShardedTensor, gather, scatter
 from repro.core.switching import SwitchReport
 from repro.core.switching import switch as core_switch
@@ -28,9 +31,17 @@ from .strategy import Strategy
 
 @dataclass
 class RunResult:
-    """One step's fetched tensors, sharded per the active strategy."""
+    """One step's fetched tensors, sharded per the active strategy.
+
+    Microbatched runs also carry the pipeline ``schedule`` that was
+    executed (``stats`` summarizes its ticks/bubbles/messages)."""
 
     outputs: dict[str, ShardedTensor]
+    schedule: PipelineSchedule | None = None
+
+    @property
+    def stats(self) -> "ScheduleStats | None":
+        return self.schedule.stats() if self.schedule else None
 
     def shards(self, name: str) -> ShardedTensor:
         return self.outputs[name]
@@ -87,10 +98,64 @@ class Session:
 
     # -- execution ---------------------------------------------------------
     def run(self, feeds: Mapping[str, object] | None = None,
-            fetches: Sequence[str] | None = None) -> RunResult:
+            fetches: Sequence[str] | None = None, *,
+            num_microbatches: int = 1,
+            schedule: str = "1f1b") -> RunResult:
         """Execute one step: placeholders come from ``feeds`` (global
-        arrays or ShardedTensors), parameters from session state."""
+        arrays or ShardedTensors), parameters from session state.
+
+        With ``num_microbatches=m > 1`` the step runs as a pipeline:
+        batch-dim feeds are split into ``m`` microbatches, the plan's
+        pipelines execute the explicit ``schedule`` ("1f1b" or "gpipe")
+        timetable, and per-microbatch outputs are reduced by their
+        microbatch role — losses/gradients (Partial) accumulate in
+        microbatch order, batch-split outputs concatenate, parameters
+        (Duplicate) pass through.  ``m=1`` is exactly the unpipelined
+        path."""
         feeds = dict(feeds or {})
+        if schedule not in SCHEDULES:  # fail for every m, not just m > 1
+            raise ScheduleError(
+                f"unknown schedule {schedule!r} (have {SCHEDULES})")
+        if num_microbatches == 1:
+            state = self._leaf_state(feeds)
+            outs = self.executor.run(self.plan, state, fetches)
+            return RunResult(outs)
+        mplan = self.program.compile_micro(
+            self.plan.strategy_index, num_microbatches,
+            shape_env=self.shape_env, topology=self.topology)
+        sched = self.plan.schedule(num_microbatches, schedule)
+        micro_feeds = self._split_feeds(feeds, mplan)
+        states = []
+        for j in range(num_microbatches):
+            st: dict[str, ShardedTensor] = {}
+            for t in mplan.graph.placeholders():
+                annot = mplan.graph.tensors[t.name].annots[
+                    mplan.strategy_index]
+                st[t.name] = scatter(
+                    micro_feeds[j][t.name], annot,
+                    rng=np.random.default_rng(self.seed))
+            for t in mplan.graph.parameters():
+                if t.name not in self.weights:
+                    raise ValueError(
+                        f"parameter {t.name!r} not loaded; call "
+                        f"session.load")
+                st[t.name] = self.weights[t.name]
+            states.append(st)
+        if hasattr(self.executor, "run_schedule"):
+            per_mb = self.executor.run_schedule(mplan, sched, states,
+                                                fetches)
+        else:  # third-party executors: host-level microbatch loop
+            per_mb = [self.executor.run(mplan, st, fetches)
+                      for st in states]
+        k = self.plan.strategy_index
+        outs = combine_outputs(
+            per_mb, mplan.mb_roles,
+            {name: self.plan.shapes[name] for name in per_mb[0]},
+            {name: self.program.graph.tensors[name].annots[k]
+             for name in per_mb[0]})
+        return RunResult(outs, schedule=sched)
+
+    def _leaf_state(self, feeds: dict) -> dict[str, ShardedTensor]:
         state: dict[str, ShardedTensor] = {}
         for t in self.program.graph.placeholders():
             if t.name not in feeds:
@@ -103,8 +168,33 @@ class Session:
                 raise ValueError(
                     f"parameter {t.name!r} not loaded; call session.load")
             state[t.name] = self.weights[t.name]
-        outs = self.executor.run(self.plan, state, fetches)
-        return RunResult(outs)
+        return state
+
+    def _split_feeds(self, feeds: dict, mplan: CompiledPlan
+                     ) -> list[dict[str, np.ndarray]]:
+        """Split every placeholder feed along its batch dim into the
+        micro plan's ``num_microbatches`` slices."""
+        m = mplan.num_microbatches
+        out: list[dict[str, np.ndarray]] = [{} for _ in range(m)]
+        for t in self.program.graph.placeholders():
+            if t.name not in feeds:
+                raise ValueError(f"missing feed for placeholder {t.name!r}")
+            value = feeds.pop(t.name)
+            if isinstance(value, ShardedTensor):
+                raise ValueError(
+                    f"microbatched runs take GLOBAL arrays for feeds; "
+                    f"{t.name!r} is a ShardedTensor")
+            value = np.asarray(value)
+            d = mplan.mb_roles[t.name]
+            if value.shape[d] % m != 0:
+                raise ValueError(
+                    f"feed {t.name!r} batch dim {value.shape[d]} not "
+                    f"divisible by {m} microbatches")
+            for j, piece in enumerate(np.split(value, m, axis=d)):
+                out[j][t.name] = piece
+        if feeds:
+            raise ValueError(f"unknown feeds {sorted(feeds)}")
+        return out
 
     # -- dynamic switching (§6) --------------------------------------------
     def switch(self, strategy: "Strategy | str | int") -> SwitchReport:
@@ -112,6 +202,13 @@ class Session:
         continues restart-free under the new compiled plan."""
         dst = self.program.index(strategy)
         src = self.plan.strategy_index
+        # validate BEFORE the same-strategy fast path: switching with
+        # unloaded weights is an error regardless of the destination
+        missing = [t.name for t in self.program.graph.parameters()
+                   if t.name not in self.weights]
+        if missing:
+            raise ValueError(f"cannot switch with unloaded parameters "
+                             f"{missing}")
         if dst == src:
             from repro.core.bsr import BsrPlan
             return SwitchReport(plan=BsrPlan([]), planning_seconds=0.0,
@@ -119,11 +216,6 @@ class Session:
                                 message_count=0)
         backend = "jax" if isinstance(self.executor, JaxExecutor) else "sim"
         mesh = getattr(self.executor, "mesh", None)
-        missing = [t.name for t in self.program.graph.parameters()
-                   if t.name not in self.weights]
-        if missing:
-            raise ValueError(f"cannot switch with unloaded parameters "
-                             f"{missing}")
         # same topology fallback as Program.compile: explicit session
         # topology first, then the destination strategy's own
         topology = self.topology or \

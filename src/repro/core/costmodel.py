@@ -138,21 +138,36 @@ def stage_micro_time(cluster: ClusterSpec, model: ModelSpec, st: Stage,
     return t_comp + t_tp
 
 
+def fill_drain_count(n_micro: int, n_stages: int) -> int:
+    """The 1F1B/GPipe fill+steady+drain slot count ``(m + s - 1)`` —
+    the same shape the schedule engine's timetables span
+    (``core.schedule.build_schedule(...).fill_drain_slots``), kept as one
+    definition so the analytic model and the executable schedules cannot
+    drift."""
+    return n_micro + n_stages - 1
+
+
 def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
                   seq_len: int) -> float:
     micro_tokens = p.micro_bs * seq_len
     times = [stage_micro_time(cluster, model, st, micro_tokens, seq_len)
              for st in p.stages]
-    # stage-boundary P2P per microbatch
-    p2p = 0.0
+    # stage-boundary P2P per microbatch, per boundary
+    p2p_each = []
     for a, b in zip(p.stages[:-1], p.stages[1:]):
         act_bytes = 2 * micro_tokens * model.d_model
         link = cluster.link_gbps(a.ranks[-1], b.ranks[0])
-        p2p += act_bytes / (link * 1e9)
+        p2p_each.append(act_bytes / (link * 1e9))
     bottleneck = max(times)
-    # 1F1B and GPipe share the fill/drain shape: (m + s - 1) * t_max
-    fill = (p.n_micro + len(p.stages) - 1)
-    return fill * bottleneck + p2p * p.n_micro
+    # 1F1B/GPipe overlap stage-boundary sends with the next microbatch's
+    # compute: in steady state a slot costs the max of the compute
+    # bottleneck and the slowest boundary transfer (not their sum per
+    # microbatch — the old model double-counted transfers the schedule
+    # hides).  The fill ramp additionally pays each boundary's latency
+    # once, when the first microbatch traverses the pipeline.
+    slot = max([bottleneck] + p2p_each)
+    fill = fill_drain_count(p.n_micro, len(p.stages))
+    return fill * slot + sum(p2p_each)
 
 
 def dp_sync_time(cluster: ClusterSpec, model: ModelSpec,

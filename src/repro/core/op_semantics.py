@@ -58,6 +58,111 @@ def local_apply(kind: str, xp, ins, attrs, out_shape):
     raise NotImplementedError(f"no local semantics for op kind {kind!r}")
 
 
+# ---------------------------------------------------------------------------
+# microbatch role propagation (pipeline schedules, paper §5.4)
+# ---------------------------------------------------------------------------
+#
+# Splitting the batch into microbatches is itself an SPMD-style split —
+# along *time* instead of devices.  Every tensor relates to the
+# microbatch axis in one of the DS ways (reusing the annotation dim
+# vocabulary, ``annotations.DUP``/``PARTIAL``):
+#
+#   role >= 0   Split: the tensor's dim ``role`` is the batch dim; each
+#               microbatch computes a 1/m slice of it,
+#   role == DUP       the tensor is microbatch-invariant (parameters),
+#   role == PARTIAL   each microbatch holds a summand (a loss or grad
+#               accumulated across microbatches).
+#
+# ``microbatch_role`` is the per-op propagation rule — the same table
+# shape as DEDUCTION_RULES, one tier up.  It is what lets Session.run
+# reduce per-microbatch outputs correctly (sum Partial, concat Split,
+# take-one Duplicate) and lets the micro-plan compiler scale shapes.
+
+MB_DUP = -1       # mirrors annotations.DUP
+MB_PARTIAL = -2   # mirrors annotations.PARTIAL
+
+
+class MicrobatchError(ValueError):
+    """The graph cannot be split along the batch dim at this op."""
+
+
+def microbatch_role(kind: str, in_roles, attrs, in_ndims) -> int:
+    """Propagate the microbatch role through one compute op.
+
+    ``in_roles`` follow the DS dim vocabulary above; ``in_ndims`` are the
+    input ranks (the Dot rule needs them).  Raises
+    :class:`MicrobatchError` where no per-microbatch computation exists
+    (nonlinearity over Partial, Split mixed with full-shape Duplicate...).
+    """
+    if kind in ("gelu", "relu"):
+        (r,) = in_roles
+        if r == MB_PARTIAL:
+            raise MicrobatchError(
+                f"{kind} is nonlinear; cannot apply it per-microbatch to "
+                f"an accumulated (Partial) value")
+        return r
+    if kind == "scale":           # linear: every role passes through
+        return in_roles[0]
+    if kind in ("add", "mul"):
+        a, b = in_roles
+        if a == b:
+            if kind == "mul" and a == MB_PARTIAL:
+                raise MicrobatchError(
+                    "mul of two microbatch-Partial values is nonlinear "
+                    "in the microbatch sum")
+            return a
+        if kind == "mul" and {a, b} == {MB_PARTIAL, MB_DUP}:
+            return MB_PARTIAL     # (sum_i x_i) * y == sum_i (x_i * y)
+        raise MicrobatchError(
+            f"{kind} operands have incompatible microbatch roles "
+            f"({a} vs {b}); a per-microbatch slice cannot combine with a "
+            f"full-batch operand")
+    if kind == "dot":
+        rx, rw = in_roles
+        x_ndim = in_ndims[0]
+        if rx == MB_PARTIAL and rw == MB_PARTIAL:
+            raise MicrobatchError("dot of two microbatch-Partial values")
+        if rx == MB_PARTIAL or rw == MB_PARTIAL:
+            other = rw if rx == MB_PARTIAL else rx
+            if other != MB_DUP:
+                raise MicrobatchError(
+                    "dot mixes a microbatch-Partial operand with a "
+                    "per-microbatch slice")
+            return MB_PARTIAL     # dot is linear in either operand
+        if rx == MB_DUP and rw == MB_DUP:
+            return MB_DUP
+        if rx >= 0 and rw == MB_DUP:
+            if rx == x_ndim - 1:
+                raise MicrobatchError(
+                    "X's contraction dim is the batch dim but W is "
+                    "microbatch-invariant; shapes cannot match")
+            return rx             # batch/m dims pass through
+        if rx == x_ndim - 1 and rw == 0:
+            return MB_PARTIAL     # contraction split over microbatches
+        if rx == MB_DUP and rw == 1:
+            return x_ndim - 1
+        raise MicrobatchError(
+            f"dot operand microbatch roles ({rx}, {rw}) are unsupported")
+    if kind == "sum":
+        (r,) = in_roles
+        dim = attrs["dim"]
+        if r == dim:
+            return MB_PARTIAL     # reduced batch dim -> accumulate
+        if r >= 0:
+            return r - 1 if r > dim else r
+        return r                  # DUP / PARTIAL (linear) pass through
+    if kind == "transpose":
+        (r,) = in_roles
+        if r < 0:
+            return r
+        inv = {old: new for new, old in enumerate(attrs["perm"])}
+        return inv[r]
+    if kind == "reshape":
+        (r,) = in_roles
+        return r                  # mapped by the caller (needs shapes)
+    raise NotImplementedError(f"no microbatch rule for op kind {kind!r}")
+
+
 def flops(kind: str, in_shapes, out_shape, attrs) -> int:
     """Analytic FLOP count of one (global) compute op — the compute term
     of the roofline estimate attached to compiled plans."""

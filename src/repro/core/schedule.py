@@ -1,0 +1,401 @@
+"""Pipeline schedule engine: 1F1B / GPipe timetables over `CompiledPlan.pipelines`.
+
+Progressive specialization (paper §5.3-5.4) builds the *spatial* half of
+a strategy — per-device executable graphs linked into pipelines.  This
+module supplies the *temporal* half: given the pipeline's stage count and
+a microbatch count it emits an explicit per-stage timetable of
+``(slot, stage, microbatch, phase)`` :class:`Tick`\\ s for the two
+canonical synchronous schedules,
+
+* **GPipe** — all ``m`` forwards flow through, then all ``m`` backwards
+  drain back; every stage holds up to ``m`` in-flight microbatches,
+* **1F1B** — each stage warms up with ``min(S-1-stage, m)`` forwards and
+  then strictly alternates one-forward-one-backward, bounding in-flight
+  microbatches by the stage depth instead of ``m`` (JaxPP / Megatron's
+  memory-bounded schedule).
+
+Both schedules share the fill/drain shape the analytic cost model prices
+(``costmodel.fill_drain_count``): with uniform fwd/bwd tick costs the
+timetable spans exactly ``2 * (m + S - 1)`` slots.  ``validate`` checks
+the dependency structure (fwd follows the previous stage, bwd follows the
+next stage, one tick per stage per slot); :class:`ScheduleStats` surfaces
+ticks / bubbles / p2p message counts on ``CompiledPlan`` and
+``RunResult``.
+
+The second half of the module maps a *graph* onto the timetable:
+``microbatch_roles`` propagates how each tensor relates to the batch
+split (Split / Duplicate / Partial — ``op_semantics.microbatch_role``),
+``microbatch_graph`` scales a deduced graph's shapes down to one
+microbatch, ``assign_stages`` buckets ops into pipeline stages, and
+``combine_outputs`` reduces per-microbatch fetches back to full-batch
+values (sum Partial, concatenate Split, take-one Duplicate).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import op_semantics
+from .annotations import DUP, PARTIAL
+from .graph import Graph
+from .op_semantics import MB_DUP, MB_PARTIAL, MicrobatchError
+from .specialize import Pipeline
+
+SCHEDULES = ("1f1b", "gpipe")
+
+
+class ScheduleError(ValueError):
+    """Invalid schedule request (unknown kind, bad microbatch count)."""
+
+
+@dataclass(frozen=True)
+class Tick:
+    """One unit of pipeline work: ``stage`` runs ``phase`` for
+    ``microbatch`` during time ``slot`` (uniform fwd/bwd durations)."""
+
+    slot: int
+    stage: int
+    microbatch: int
+    phase: str            # "fwd" | "bwd"
+
+
+@dataclass(frozen=True)
+class ScheduleStats:
+    """Static accounting of one timetable."""
+
+    n_ticks: int          # compute ticks actually scheduled (2 * m * S)
+    n_slots: int          # timeline length in slots
+    bubbles: int          # idle (stage, slot) cells across the timetable
+    p2p_messages: int     # stage-boundary sends (fwd activations + bwd grads)
+
+    def summary(self) -> str:
+        return (f"{self.n_ticks} ticks over {self.n_slots} slots, "
+                f"{self.bubbles} bubbles, {self.p2p_messages} p2p msgs")
+
+
+@dataclass
+class PipelineSchedule:
+    """An explicit timetable: ``ticks`` ordered by (slot, stage)."""
+
+    kind: str
+    n_stages: int
+    num_microbatches: int
+    ticks: list[Tick] = field(default_factory=list)
+
+    @property
+    def n_slots(self) -> int:
+        return max(t.slot for t in self.ticks) + 1 if self.ticks else 0
+
+    @property
+    def fill_drain_slots(self) -> int:
+        """Timeline length in fwd+bwd *pairs* — the ``(m + S - 1)``
+        fill/drain count the cost model prices."""
+        return self.n_slots // 2
+
+    def stage_ticks(self, stage: int) -> list[Tick]:
+        return [t for t in self.ticks if t.stage == stage]
+
+    def by_slot(self) -> dict[int, list[Tick]]:
+        out: dict[int, list[Tick]] = {}
+        for t in self.ticks:
+            out.setdefault(t.slot, []).append(t)
+        return out
+
+    def peak_in_flight(self, stage: int) -> int:
+        """Max microbatches forwarded but not yet backwarded at ``stage``
+        (the activation-memory bound the 1F1B schedule exists to cap)."""
+        live = peak = 0
+        for t in sorted(self.stage_ticks(stage), key=lambda t: t.slot):
+            live += 1 if t.phase == "fwd" else -1
+            peak = max(peak, live)
+        return peak
+
+    def warmup_depth(self, stage: int) -> int:
+        """Forward ticks this stage runs before its first backward."""
+        n = 0
+        for t in sorted(self.stage_ticks(stage), key=lambda t: t.slot):
+            if t.phase == "bwd":
+                break
+            n += 1
+        return n
+
+    def stats(self) -> ScheduleStats:
+        m, s = self.num_microbatches, self.n_stages
+        return ScheduleStats(
+            n_ticks=len(self.ticks),
+            n_slots=self.n_slots,
+            bubbles=s * self.n_slots - len(self.ticks),
+            p2p_messages=2 * m * (s - 1))
+
+    def describe(self) -> str:
+        lines = [f"{self.kind} schedule: {self.n_stages} stage(s) x "
+                 f"{self.num_microbatches} microbatch(es), "
+                 + self.stats().summary()]
+        by_slot = self.by_slot()
+        for s in range(self.n_stages):
+            row = []
+            for slot in range(self.n_slots):
+                tick = next((t for t in by_slot.get(slot, ())
+                             if t.stage == s), None)
+                row.append("  .  " if tick is None else
+                           f"{tick.phase[0].upper()}{tick.microbatch:<3d} ")
+            lines.append(f"  stage {s}: " + "".join(row))
+        return "\n".join(lines)
+
+
+def build_schedule(n_stages: int, num_microbatches: int,
+                   kind: str = "1f1b") -> PipelineSchedule:
+    """Construct the per-stage timetable for ``kind``.
+
+    Closed forms (uniform tick durations; ``S`` stages, ``m``
+    microbatches, ``w_s = min(S-1-s, m)`` warmup forwards):
+
+    =====  =========================================  ====================
+    kind   fwd(j, s) slot                             bwd(j, s) slot
+    =====  =========================================  ====================
+    gpipe  ``s + j``                                  ``m + 2S - 2 - s + j``
+    1f1b   warmup ``s + j``; steady                   ``2S - 1 - s + 2j``
+           ``2S - 2 - s + 2(j - w_s)``
+    =====  =========================================  ====================
+
+    Both span ``2 (m + S - 1)`` slots — 1F1B trades nothing in makespan
+    (for uniform ticks) but caps in-flight microbatches at the stage
+    depth instead of ``m``.
+    """
+    if kind not in SCHEDULES:
+        raise ScheduleError(f"unknown schedule {kind!r} (have {SCHEDULES})")
+    if n_stages < 1:
+        raise ScheduleError(f"need at least one stage (got {n_stages})")
+    if num_microbatches < 1:
+        raise ScheduleError(
+            f"need at least one microbatch (got {num_microbatches})")
+    s_total, m = n_stages, num_microbatches
+    ticks: list[Tick] = []
+    for s in range(s_total):
+        if kind == "gpipe":
+            for j in range(m):
+                ticks.append(Tick(s + j, s, j, "fwd"))
+                ticks.append(Tick(m + 2 * s_total - 2 - s + j, s, j, "bwd"))
+        else:  # 1f1b
+            warm = min(s_total - 1 - s, m)
+            for j in range(m):
+                if j < warm:
+                    slot = s + j
+                else:
+                    slot = 2 * s_total - 2 - s + 2 * (j - warm)
+                ticks.append(Tick(slot, s, j, "fwd"))
+                ticks.append(Tick(2 * s_total - 1 - s + 2 * j, s, j, "bwd"))
+    ticks.sort(key=lambda t: (t.slot, t.stage))
+    sched = PipelineSchedule(kind, s_total, m, ticks)
+    validate(sched)
+    return sched
+
+
+def validate(sched: PipelineSchedule) -> None:
+    """Assert the timetable is executable: each stage runs one tick per
+    slot, forwards follow the previous stage, backwards follow the next
+    stage and the microbatch's own forward."""
+    seen: dict[tuple[int, int, str], int] = {}
+    busy: set[tuple[int, int]] = set()
+    for t in sched.ticks:
+        key = (t.stage, t.microbatch, t.phase)
+        if key in seen:
+            raise ScheduleError(f"duplicate tick {key}")
+        seen[key] = t.slot
+        cell = (t.stage, t.slot)
+        if cell in busy:
+            raise ScheduleError(
+                f"stage {t.stage} runs two ticks in slot {t.slot}")
+        busy.add(cell)
+    expect = 2 * sched.n_stages * sched.num_microbatches
+    if len(sched.ticks) != expect:
+        raise ScheduleError(
+            f"{len(sched.ticks)} ticks scheduled, expected {expect}")
+
+    def slot_of(stage: int, j: int, phase: str) -> int:
+        slot = seen.get((stage, j, phase))
+        if slot is None:
+            raise ScheduleError(
+                f"missing tick ({stage}, mb={j}, {phase})")
+        return slot
+
+    for (stage, j, phase), slot in seen.items():
+        if phase == "fwd":
+            if stage > 0 and slot_of(stage - 1, j, "fwd") >= slot:
+                raise ScheduleError(
+                    f"fwd(mb={j}) at stage {stage} precedes stage "
+                    f"{stage - 1}")
+        else:
+            if stage < sched.n_stages - 1 and \
+                    slot_of(stage + 1, j, "bwd") >= slot:
+                raise ScheduleError(
+                    f"bwd(mb={j}) at stage {stage} precedes stage "
+                    f"{stage + 1}")
+            if slot_of(stage, j, "fwd") >= slot:
+                raise ScheduleError(
+                    f"bwd(mb={j}) at stage {stage} precedes its fwd")
+
+
+# ---------------------------------------------------------------------------
+# microbatch roles over a graph
+# ---------------------------------------------------------------------------
+
+def microbatch_roles(graph: Graph, batch_dim: int = 0) -> dict[str, int]:
+    """Tensor name -> microbatch role (``op_semantics`` vocabulary):
+    placeholders are Split along ``batch_dim``, parameters Duplicate,
+    everything else propagates through ``op_semantics.microbatch_role``
+    (reshape's split dim is remapped here, where shapes are known)."""
+    roles: dict[str, int] = {}
+    for op in graph.ops:
+        out = op.outputs[0] if op.outputs else None
+        if op.kind == "placeholder":
+            if len(out.shape) <= batch_dim:
+                raise MicrobatchError(
+                    f"placeholder {out.name!r} has no batch dim "
+                    f"{batch_dim} to split")
+            roles[out.name] = batch_dim
+            continue
+        if op.kind == "parameter":
+            roles[out.name] = MB_DUP
+            continue
+        if op.kind == "comm":
+            roles[out.name] = roles[op.inputs[0].name]
+            continue
+        in_roles = [roles[t.name] for t in op.inputs]
+        try:
+            role = op_semantics.microbatch_role(
+                op.kind, in_roles, op.attrs,
+                [len(t.shape) for t in op.inputs])
+        except MicrobatchError as e:
+            raise MicrobatchError(f"{out.name!r}: {e}") from None
+        if op.kind == "reshape" and role >= 0:
+            role = _map_reshape_dim(role, op.inputs[0].shape,
+                                    op.attrs["new_shape"], out.name)
+        roles[out.name] = role
+    return roles
+
+
+def _map_reshape_dim(d: int, old_shape, new_shape, name: str) -> int:
+    """The batch dim survives a reshape iff the leading-dims product is
+    preserved (the same rule annotation deduction uses)."""
+    import math
+    before = math.prod(old_shape[:d])
+    acc = 1
+    for nd, size in enumerate(new_shape):
+        if acc == before:
+            return nd
+        acc *= size
+    raise MicrobatchError(
+        f"{name!r}: reshape moves the microbatch (batch) dim {d}")
+
+
+def microbatch_graph(graph: Graph, num_microbatches: int,
+                     roles: dict[str, int] | None = None,
+                     shape_env: dict[str, int] | None = None) -> Graph:
+    """A deep copy of ``graph`` with every Split-role shape scaled down
+    to one microbatch (reshape targets rewritten alongside; symbolic
+    dims are bound through ``shape_env`` first).  The copy keeps the
+    installed annotations, so it compiles through the normal
+    specialization path."""
+    import copy
+
+    from .symbolic import bind_shape, free_symbols
+
+    roles = roles if roles is not None else microbatch_roles(graph)
+    m = num_microbatches
+    micro = copy.deepcopy(graph)
+    env = dict(shape_env or {})
+    for name, t in micro.tensors.items():
+        if free_symbols(t.shape) <= set(env):
+            t.shape = bind_shape(t.shape, env)
+        d = roles[name]
+        if d < 0:
+            continue
+        size = t.shape[d]
+        if not isinstance(size, int):
+            raise MicrobatchError(
+                f"{name!r}: symbolic batch dim {size!r}; pass shape_env "
+                f"to bind it before microbatching")
+        if size % m != 0:
+            raise MicrobatchError(
+                f"{name!r}: batch dim {size} not divisible by "
+                f"{m} microbatches")
+        t.shape = t.shape[:d] + (size // m,) + t.shape[d + 1:]
+    for op in micro.ops:
+        if op.kind == "reshape" and roles[op.outputs[0].name] >= 0:
+            op.attrs["new_shape"] = tuple(op.outputs[0].shape)
+    return micro
+
+
+# ---------------------------------------------------------------------------
+# op -> stage assignment + output combination
+# ---------------------------------------------------------------------------
+
+def assign_stages(graph: Graph, strategy: int,
+                  pipelines: list[Pipeline]) -> dict[int, int]:
+    """Map ``id(op) -> stage index``.  A device's stage is its position
+    in its pipeline; an op runs at the deepest stage any of its tensors
+    touches (stage-boundary CommOps thereby land on the *receiving*
+    stage — the activation send completes the hop)."""
+    dev_stage: dict[int, int] = {}
+    for p in pipelines:
+        for d in p.devices():
+            s = p.stage_of(d)
+            dev_stage[d] = max(dev_stage.get(d, 0), s)
+    out: dict[int, int] = {}
+    for op in graph.ops:
+        stages = [dev_stage.get(d, 0)
+                  for t in op.inputs + op.outputs
+                  for d in t.annots[strategy].devices]
+        out[id(op)] = max(stages, default=0)
+    return out
+
+
+def combine_outputs(per_mb: list[dict], roles: dict[str, int],
+                    full_shapes: dict[str, tuple[int, ...]],
+                    full_annots: dict[str, object]) -> dict:
+    """Reduce per-microbatch fetches to full-batch ShardedTensors.
+
+    Partial -> sequential per-shard sum in microbatch order (both
+    executors' per-microbatch shards are bit-exact, so the combined
+    shards are too); Duplicate -> microbatch 0's shards; Split(d) ->
+    gather each microbatch globally, concatenate along ``d`` and
+    re-scatter under the full-batch annotation.
+    """
+    from .simulator import ShardedTensor, gather, scatter
+
+    out: dict[str, ShardedTensor] = {}
+    for name in per_mb[0]:
+        role = roles[name]
+        shards = [r[name] for r in per_mb]
+        annot = full_annots[name]
+        if role == MB_PARTIAL:
+            parts = {d: a.copy() for d, a in shards[0].parts.items()}
+            for st in shards[1:]:
+                for d in parts:
+                    parts[d] = parts[d] + st.parts[d]
+            out[name] = ShardedTensor(full_shapes[name], annot, parts)
+        elif role == MB_DUP:
+            out[name] = ShardedTensor(full_shapes[name], annot,
+                                      dict(shards[0].parts))
+        else:
+            if annot.has_partial:
+                raise MicrobatchError(
+                    f"cannot reconstruct Split-role fetch {name!r} under "
+                    f"a Partial annotation; fetch the reduced value "
+                    f"instead")
+            full = np.concatenate([gather(s) for s in shards], axis=role)
+            out[name] = scatter(full, annot)
+    return out
+
+
+__all__ = [
+    "PipelineSchedule", "ScheduleError", "ScheduleStats", "Tick",
+    "SCHEDULES", "assign_stages", "build_schedule", "combine_outputs",
+    "microbatch_graph", "microbatch_roles", "validate",
+]
+
+# re-exported for callers reasoning about roles without op_semantics
+assert (MB_DUP, MB_PARTIAL) == (DUP, PARTIAL)

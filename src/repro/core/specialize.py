@@ -168,6 +168,18 @@ class Pipeline:
     def devices(self) -> set[int]:
         return set().union(*self.stages) if self.stages else set()
 
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def stage_of(self, dev: int) -> int | None:
+        """This device's stage index (its position in the timetable the
+        schedule engine builds), or None if the device is not staged."""
+        for i, devs in enumerate(self.stages):
+            if dev in devs:
+                return i
+        return None
+
 
 def construct_pipelines(graph: Graph, strategy: int = 0,
                         scheduled_only: bool = True,

@@ -46,11 +46,13 @@ def make_batch(corpus, cfg, batch, seq, rng):
     return out
 
 
-def strategy_report(params, mesh) -> None:
+def strategy_report(params, mesh, num_microbatches: int = 1) -> None:
     """Describe the run's weight placement through ``repro.api``: the
-    FSDP-style strategy over the mesh devices, plus the fused-BSR cost of
-    draining to half the cluster (the elastic-training transition this
-    driver would pay on a node failure)."""
+    FSDP-style strategy over the mesh devices, the pipeline schedule the
+    microbatch count implies (grad accumulation is the single-stage 1F1B
+    case), plus the fused-BSR cost of draining to half the cluster (the
+    elastic-training transition this driver would pay on a node
+    failure)."""
     import jax.tree_util as jtu
 
     from repro import api
@@ -70,6 +72,10 @@ def strategy_report(params, mesh) -> None:
     plan = prog.compile("fsdp")
     print(f"placement[fsdp]: {len(shapes)} tensors over "
           f"{len(plan.devices)} device(s)")
+    sched = plan.schedule(max(num_microbatches, 1), "1f1b")
+    print(f"schedule[1f1b]: {plan.n_stages} stage(s) x "
+          f"{sched.num_microbatches} microbatch(es) -> "
+          f"{sched.stats().summary()}")
     if len(devices) >= 2:
         half = prog.strategy("fsdp-half")
         report = api.estimate_switch(
@@ -107,7 +113,7 @@ def main():
     mesh = make_smoke_mesh()
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.strategy_report:
-        strategy_report(params, mesh)
+        strategy_report(params, mesh, num_microbatches=args.microbatches)
     opt_state = init_opt_state(params)
     start = 0
     if args.resume:

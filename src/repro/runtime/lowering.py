@@ -11,13 +11,17 @@ tensors through XLA collectives:
   per round) and every round becomes ONE ``jax.lax.ppermute`` over
   padded slabs, instead of one collective launch per pair.  The static
   round schedule is reported in :class:`LoweringStats`,
-* reduce groups (AR / RS / SplitAR / SplitRS) —
-  - ``reduction="exact"``: ``jax.lax.all_gather`` of the masked per-source
+* reduce groups (AR / RS / SplitAR / SplitRS) — run as **subgroup
+  collectives** via ``axis_index_groups`` whenever every destination is
+  a source (non-participant mesh positions ride along as dummy partition
+  entries; see ``PlanLowering._reduce_groups_static``), falling back to
+  the masked full-axis form otherwise:
+  - ``reduction="exact"``: ``jax.lax.all_gather`` of the per-source
     contributions, then a left fold in float64 following the group's
     ``srcs`` order.  This reproduces ``simulator.apply_plan`` **bit
     exactly** for arbitrary inputs (the simulator accumulates in float64
     in the same order before casting back),
-  - ``reduction="fast"``: a single masked ``jax.lax.psum`` in the native
+  - ``reduction="fast"``: a single ``jax.lax.psum`` in the native
     dtype (a real all-reduce; bit-exact only when the data makes the sum
     order-insensitive, e.g. integer-valued shards),
 * ID / Slice — no collective; covered by the local-retention path.
@@ -85,12 +89,14 @@ class LoweringStats:
     copy_pairs: int = 0      # point-to-point (src, dst) deliveries
     ppermute_calls: int = 0  # batched permutes emitted after fusion
     reduce_groups: int = 0   # all_gather / psum launches
+    grouped_reduces: int = 0  # of which run on axis_index_groups subgroups
     stages: int = 0
 
     def merge(self, other: "LoweringStats") -> None:
         self.copy_pairs += other.copy_pairs
         self.ppermute_calls += other.ppermute_calls
         self.reduce_groups += other.reduce_groups
+        self.grouped_reduces += other.grouped_reduces
         self.stages += other.stages
 
 
@@ -210,8 +216,10 @@ class PlanLowering:
         self.has_reduce = any(g.reduce for s in plan.steps for g in s.groups)
 
         # static geometry per stage, verified up front; copy deliveries
-        # fused into batched-permute rounds
+        # fused into batched-permute rounds, reduce groups mapped onto
+        # axis_index_groups subgroup collectives where possible
         self._stage_rounds: list[list[_Round]] = []
+        self._reduce_partitions: dict[int, tuple] = {}
         prev = plan.src
         for stage in plan.stages:
             deliveries = [(g.box, g.dsts) for step in stage.steps
@@ -227,6 +235,10 @@ class PlanLowering:
                                 f"group box {g.box}")
                     if g.reduce:
                         self.stats.reduce_groups += 1
+                        part = self._reduce_groups_static(g)
+                        self._reduce_partitions[id(g)] = part
+                        if part[0 if reduction == "fast" else 1]:
+                            self.stats.grouped_reduces += 1
                         continue
                     src = g.srcs[0]
                     for d in g.dsts:
@@ -241,6 +253,33 @@ class PlanLowering:
             self.stats.ppermute_calls += len(rounds)
             self.stats.stages += 1
             prev = stage.annot_after
+
+    def _reduce_groups_static(self, g) -> tuple[list | None, list | None]:
+        """axis_index_groups partitions for one reduce group: the
+        ``(psum_groups, all_gather_groups)`` pair, either of which is
+        ``None`` when the masked full-axis collective must be kept.
+
+        The source devices form one subgroup; every other mesh position
+        still has to appear (XLA requires a partition of the axis), so
+        non-participants ride along as singletons for psum (ragged
+        partitions are fine for all-reduce) and as equal-size dummy
+        chunks for all_gather (gather output shapes must be uniform —
+        when the remainder doesn't chunk evenly the exact path falls
+        back to the full axis).  Results on non-source devices are
+        garbage, which is only safe because every destination is a
+        source; otherwise both stay masked full-axis.
+        """
+        pos = [self.order.pos(s) for s in g.srcs]  # srcs order == fold order
+        if not set(g.dsts) <= set(g.srcs):
+            return None, None
+        others = [p for p in range(self.n_mesh) if p not in set(pos)]
+        psum_groups = [pos] + [[p] for p in others]
+        k = len(pos)
+        ag_groups = None
+        if len(others) % k == 0:
+            ag_groups = [pos] + [others[i:i + k]
+                                 for i in range(0, len(others), k)]
+        return psum_groups, ag_groups
 
     # -- traced emission ---------------------------------------------------
 
@@ -301,8 +340,20 @@ class PlanLowering:
             branches.append(lambda v, sl=sl: v[sl])
         tbl = jnp.asarray(branch_of_pos, jnp.int32)
         contrib = jax.lax.switch(tbl[i], branches, x)
+        psum_groups, ag_groups = self._reduce_partitions[id(g)]
         if self.reduction == "fast":
-            return jax.lax.psum(contrib, self.axis)
+            return jax.lax.psum(contrib, self.axis,
+                                axis_index_groups=psum_groups)
+        if ag_groups is not None:
+            # subgroup gather: position j within the group IS g.srcs[j],
+            # so the float64 fold keeps the simulator's srcs order
+            gathered = jax.lax.all_gather(contrib.astype(jnp.float64),
+                                          self.axis,
+                                          axis_index_groups=ag_groups)
+            acc = gathered[0]
+            for j in range(1, len(g.srcs)):
+                acc = acc + gathered[j]
+            return acc
         gathered = jax.lax.all_gather(contrib.astype(jnp.float64), self.axis)
         acc = gathered[self.order.pos(g.srcs[0])]
         for s in g.srcs[1:]:

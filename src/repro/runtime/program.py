@@ -43,18 +43,33 @@ from .lowering import (DeviceOrder, LoweringStats, PlanLowering, maybe_x64,
 
 class LoweredGraph:
     """A deduced graph + strategy compiled to one shard_map program,
-    reusable over fresh shard values without retracing."""
+    reusable over fresh shard values without retracing.
+
+    With ``num_microbatches=m > 1`` the SAME program additionally scans
+    over a leading microbatch axis: placeholder buffers carry all ``m``
+    microbatch shards stacked at axis 1, a ``jax.lax.scan`` runs the
+    per-device body (unchanged ``lax.switch`` branches + comm lowerings)
+    once per microbatch, and every fetch comes back per-microbatch — the
+    pipeline schedule's work, expressed as one XLA program whose
+    dependence order realizes the same 1F1B/GPipe overlap.  The graph
+    passed in must then be the MICRO graph (shapes already scaled;
+    ``Program.compile_micro``)."""
 
     def __init__(self, graph: Graph, strategy: int = 0, *,
                  shape_env: dict[str, int] | None = None, mesh=None,
                  topology: Topology | None = None,
-                 reduction: str = "exact", fetches=None):
+                 reduction: str = "exact", fetches=None,
+                 num_microbatches: int = 1):
         import jax
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
         self.graph = graph
         self.k = strategy
+        if num_microbatches < 1:
+            raise ValueError(
+                f"num_microbatches must be >= 1 (got {num_microbatches})")
+        self.num_microbatches = num_microbatches
         env = shape_env or {}
         self.shapes = {name: bind_shape(t.shape, env)
                        for name, t in graph.tensors.items()}
@@ -136,9 +151,14 @@ class LoweredGraph:
             return jax.lax.switch(i, [branch_for(p) for p in range(n_mesh)],
                                   *ins)
 
-        def body(*blocks):
-            i = jax.lax.axis_index(axis)
-            tenv = {t.name: b[0] for t, b in zip(self.leaves, blocks)}
+        # placeholders carry a per-microbatch axis in microbatched mode;
+        # parameters are microbatch-invariant and stay single-buffer
+        self._per_mb = {t.name for t in self.leaves
+                        if t.producer is not None
+                        and t.producer.kind == "placeholder"}
+        m = num_microbatches
+
+        def eval_ops(tenv, i):
             for op in graph.ops:
                 if op.kind in ("placeholder", "parameter"):
                     continue
@@ -149,11 +169,35 @@ class LoweredGraph:
                 else:
                     tenv[out_name] = emit_compute(
                         op, [tenv[t.name] for t in op.inputs], i)
-            return tuple(tenv[f][None] for f in self.fetches)
+            return tenv
 
-        in_specs = tuple(P(axis, *([None] * len(shapes[t.name])))
+        def body(*blocks):
+            i = jax.lax.axis_index(axis)
+            if m == 1:
+                tenv = {t.name: b[0] for t, b in zip(self.leaves, blocks)}
+                tenv = eval_ops(tenv, i)
+                return tuple(tenv[f][None] for f in self.fetches)
+            shared = {t.name: b[0] for t, b in zip(self.leaves, blocks)
+                      if t.name not in self._per_mb}
+            xs = {t.name: b[0] for t, b in zip(self.leaves, blocks)
+                  if t.name in self._per_mb}          # (m, *pad) each
+
+            def mb_body(carry, x_j):
+                tenv = eval_ops({**shared, **x_j}, i)
+                return carry, tuple(tenv[f] for f in self.fetches)
+
+            _, ys = jax.lax.scan(mb_body, 0, xs, length=m)  # ys (m, *pad)
+            return tuple(y[None] for y in ys)
+
+        def leaf_rank(t):
+            rank = len(shapes[t.name])
+            return rank + 1 if m > 1 and t.name in self._per_mb else rank
+
+        in_specs = tuple(P(axis, *([None] * leaf_rank(t)))
                          for t in self.leaves)
-        out_specs = tuple(P(axis, *([None] * len(shapes[f])))
+        out_rank = {f: len(shapes[f]) + (1 if m > 1 else 0)
+                    for f in self.fetches}
+        out_specs = tuple(P(axis, *([None] * out_rank[f]))
                           for f in self.fetches)
         jitted = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
                                    out_specs=out_specs, check_rep=False))
@@ -164,38 +208,79 @@ class LoweredGraph:
     def _pack(self, st: ShardedTensor, annot, shape) -> np.ndarray:
         return pack_shards(st.parts, annot, shape, self.n_mesh, self.order)
 
-    def run(self, state: dict[str, ShardedTensor]
-            ) -> dict[str, ShardedTensor]:
-        """Execute once; ``state`` maps every leaf name (placeholder AND
-        parameter) to its ShardedTensor under the strategy annotation."""
+    def _put(self, stacked: np.ndarray):
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         axis = self.mesh.axis_names[0]
+        spec = P(axis, *([None] * (stacked.ndim - 1)))
+        return jax.device_put(stacked, NamedSharding(self.mesh, spec))
+
+    def _unpack(self, name: str, arr: np.ndarray) -> ShardedTensor:
+        annot = self.graph.tensors[name].annots[self.k]
+        shape = self.shapes[name]
+        parts = {
+            dev: arr[(self.order.pos(dev),)
+                     + tuple(slice(0, s)
+                             for s in annot.device_shape(dev, shape))
+                     ].copy()
+            for dev in annot.devices}
+        return ShardedTensor(shape, annot, parts)
+
+    def run(self, state: dict[str, ShardedTensor]
+            ) -> dict[str, ShardedTensor]:
+        """Execute once; ``state`` maps every leaf name (placeholder AND
+        parameter) to its ShardedTensor under the strategy annotation."""
+        if self.num_microbatches != 1:
+            raise ValueError("microbatched program: use run_microbatches")
         blocks = []
         for t in self.leaves:
             if t.name not in state:
                 raise ValueError(f"missing leaf tensor {t.name!r}")
             annot = t.annots[self.k]
-            stacked = self._pack(state[t.name], annot, self.shapes[t.name])
-            spec = P(axis, *([None] * (stacked.ndim - 1)))
-            blocks.append(jax.device_put(
-                stacked, NamedSharding(self.mesh, spec)))
+            blocks.append(self._put(self._pack(
+                state[t.name], annot, self.shapes[t.name])))
         outs = self.fn(*blocks)
+        return {name: self._unpack(name, np.asarray(out))
+                for name, out in zip(self.fetches, outs)}
 
-        result: dict[str, ShardedTensor] = {}
+    def run_microbatches(self, states: list[dict[str, ShardedTensor]]
+                         ) -> list[dict[str, ShardedTensor]]:
+        """Execute the scanned program over ``num_microbatches`` leaf
+        states (microbatch ``j``'s placeholders in ``states[j]``;
+        parameters read from ``states[0]``).  Returns per-microbatch
+        fetches, bit-comparable to ``SimulatorExecutor.run_schedule``."""
+        m = self.num_microbatches
+        if m == 1:
+            raise ValueError("unpipelined program: use run")
+        if len(states) != m:
+            raise ValueError(
+                f"{len(states)} microbatch states for a {m}-microbatch "
+                f"program")
+        blocks = []
+        for t in self.leaves:
+            annot = t.annots[self.k]
+            shape = self.shapes[t.name]
+            if t.name in self._per_mb:
+                for st in states:
+                    if t.name not in st:
+                        raise ValueError(
+                            f"missing leaf tensor {t.name!r}")
+                blocks.append(self._put(np.stack(
+                    [self._pack(st[t.name], annot, shape)
+                     for st in states], axis=1)))
+            else:
+                if t.name not in states[0]:
+                    raise ValueError(f"missing leaf tensor {t.name!r}")
+                blocks.append(self._put(self._pack(
+                    states[0][t.name], annot, shape)))
+        outs = self.fn(*blocks)
+        results: list[dict[str, ShardedTensor]] = [{} for _ in range(m)]
         for name, out in zip(self.fetches, outs):
-            annot = self.graph.tensors[name].annots[self.k]
-            shape = self.shapes[name]
-            arr = np.asarray(out)
-            parts = {
-                dev: arr[(self.order.pos(dev),)
-                         + tuple(slice(0, s)
-                                 for s in annot.device_shape(dev, shape))
-                         ].copy()
-                for dev in annot.devices}
-            result[name] = ShardedTensor(shape, annot, parts)
-        return result
+            arr = np.asarray(out)          # (n_mesh, m, *pad)
+            for j in range(m):
+                results[j][name] = self._unpack(name, arr[:, j])
+        return results
 
 
 def plan_input_name(graph: Graph, op_id: int) -> str:
@@ -208,8 +293,8 @@ def plan_input_name(graph: Graph, op_id: int) -> str:
 def lower_graph(graph: Graph, strategy: int = 0, *,
                 shape_env: dict[str, int] | None = None, mesh=None,
                 topology: Topology | None = None, reduction: str = "exact",
-                fetches=None) -> LoweredGraph:
+                fetches=None, num_microbatches: int = 1) -> LoweredGraph:
     """Compile a deduced graph for one strategy; see :class:`LoweredGraph`."""
     return LoweredGraph(graph, strategy, shape_env=shape_env, mesh=mesh,
                         topology=topology, reduction=reduction,
-                        fetches=fetches)
+                        fetches=fetches, num_microbatches=num_microbatches)

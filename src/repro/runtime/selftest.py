@@ -278,7 +278,113 @@ def run_all(max_devices: int = 8) -> dict:
             return {"devices": len(plan.devices)}
         record(f"api:session/{n}", session_case)
 
-    # 7. batched-permute fusion: fewer collective launches than pairs,
+    # 7. microbatched pipeline schedules: Session.run(num_microbatches=m)
+    #    over a 2-stage loss-accumulating pipeline — per-microbatch shards
+    #    bit-exact sim vs jax (the jax side scans ONE shard_map program
+    #    over the microbatch axis), fetches bit-identical across
+    #    m in {1,2,4} (integer data makes the loss sums exact), GPipe ==
+    #    1F1B bitwise, and the timetable matches the analytic fill/drain
+    #    count
+    for n, mesh in meshes.items():
+        def pipeline_case(n=n, mesh=mesh):
+            from repro import api
+            from repro.core.costmodel import fill_drain_count
+
+            half = n // 2
+            s0, s1 = list(range(half)), list(range(half, n))
+            g = api.Graph()
+            g.placeholder("X", (16, 16))
+            g.parameter("W1", (16, 12))
+            h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"),
+                       name="H")
+            g.comm(h, name="H2")
+            g.parameter("W2", (12, 6))
+            y = g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+            g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+
+            col = DS({1: half}) if half > 1 else DS({})
+            row = DS({0: half}) if half > 1 else DS({})
+            strat = api.Strategy(f"pipe{n}", {
+                "X": spmd(s0, DS({DUP: half})),
+                "W1": spmd(s0, col),
+                "H2": spmd(s1, row),
+                "W2": spmd(s1, DS({DUP: half})),
+            })
+            prog = api.Program(g, [strat])
+
+            srng = np.random.default_rng(11)
+            xv = srng.integers(-4, 5, (16, 16)).astype(np.float32)
+            w1v = srng.integers(-4, 5, (16, 12)).astype(np.float32)
+            w2v = srng.integers(-4, 5, (12, 6)).astype(np.float32)
+            want_y = np.maximum(xv @ w1v, 0) @ w2v
+            want_l = want_y.sum()
+
+            results = {}
+            for ex in (api.SimulatorExecutor(), api.JaxExecutor(mesh)):
+                sess = api.Session(prog, f"pipe{n}", executor=ex)
+                sess.load({"W1": w1v, "W2": w2v})
+                for m in (1, 2, 4):
+                    r = sess.run({"X": xv}, fetches=["Y", "L"],
+                                 num_microbatches=m)
+                    # bit-identical across m: integer-exact loss sums
+                    assert float(r.value("L")) == float(want_l), \
+                        (ex.name, m, float(r.value("L")), float(want_l))
+                    np.testing.assert_array_equal(r.value("Y"), want_y)
+                    results[(ex.name, m)] = r
+                rg = sess.run({"X": xv}, fetches=["Y", "L"],
+                              num_microbatches=4, schedule="gpipe")
+                results[(ex.name, "gpipe")] = rg
+            for m in (2, 4, "gpipe"):
+                for name in ("Y", "L"):
+                    a = results[("sim", m)].shards(name)
+                    b = results[("jax", m)].shards(name)
+                    for dev in a.parts:
+                        np.testing.assert_array_equal(
+                            b.parts[dev], a.parts[dev],
+                            err_msg=f"{name} m={m} dev {dev}: jax "
+                                    f"differs from sim")
+            for ex in ("sim", "jax"):  # GPipe == 1F1B bitwise
+                for name in ("Y", "L"):
+                    a = results[(ex, 4)].shards(name)
+                    b = results[(ex, "gpipe")].shards(name)
+                    for dev in a.parts:
+                        np.testing.assert_array_equal(b.parts[dev],
+                                                      a.parts[dev])
+            plan = prog.compile(f"pipe{n}")
+            sched = results[("sim", 4)].schedule
+            assert sched.fill_drain_slots == \
+                fill_drain_count(4, plan.n_stages), \
+                (sched.fill_drain_slots, plan.n_stages)
+            return {"n_stages": plan.n_stages,
+                    "slots": sched.n_slots,
+                    "bubbles": sched.stats().bubbles}
+        record(f"api:pipeline/{n}", pipeline_case)
+
+    # 8. axis_index_groups subgroup reduces: a SplitAR plan lowers its
+    #    cross-subgroup reduce groups onto grouped collectives (the kind
+    #    sweep above re-proves bit-exactness on both reduction paths)
+    def grouped_case():
+        from repro.core.comm_resolve import resolve
+        from repro.runtime.backend import compile_plan
+
+        src, dst = kind_cases(4)["SplitAR"]
+        plan = resolve(src, dst, SHAPE)
+        cp = compile_plan(plan, SHAPE, meshes[4])
+        assert cp.stats.reduce_groups > 0, vars(cp.stats)
+        assert cp.stats.grouped_reduces == cp.stats.reduce_groups, \
+            vars(cp.stats)
+        from repro.core.simulator import apply_plan, scatter
+        st = scatter(value, src, rng=np.random.default_rng(5))
+        sim = apply_plan(st, plan)
+        out = cp(st.parts)
+        for dev, arr in sim.parts.items():
+            np.testing.assert_array_equal(out[dev], arr)
+        return {"reduce_groups": cp.stats.reduce_groups,
+                "grouped": cp.stats.grouped_reduces}
+    if 4 in meshes:
+        record("grouped:reduce/4", grouped_case)
+
+    # 9. batched-permute fusion: fewer collective launches than pairs,
     #    same bits (the differential sweep above re-proves exactness)
     def fusion_case():
         from repro.core.comm_resolve import resolve

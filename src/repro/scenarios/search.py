@@ -92,3 +92,18 @@ def search_hetero_strategy(cluster: ClusterSpec, model: ModelSpec,
     if best is None:
         raise RuntimeError("no feasible heterogeneous strategy found")
     return best
+
+
+def schedule_report(strat: Strategy) -> str:
+    """Per-pipeline 1F1B/GPipe timetable stats for a found strategy —
+    the executable (`core.schedule`) counterpart of the fill/drain term
+    `step_time` prices, so searches can report the bubble shape their
+    winner actually runs."""
+    from repro.core.schedule import build_schedule
+
+    lines = []
+    for i, p in enumerate(strat.pipelines):
+        s = build_schedule(len(p.stages), p.n_micro, strat.schedule)
+        lines.append(f"pipeline {i} [{strat.schedule}]: "
+                     f"{s.stats().summary()}")
+    return "\n".join(lines)

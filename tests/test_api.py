@@ -292,6 +292,34 @@ def test_session_validates_feeds_and_weights():
         sess.switch("never-registered")
 
 
+def test_session_switch_same_strategy_validates_weights():
+    """Regression: the same-strategy fast path used to return an empty
+    SwitchReport without the unloaded-parameter validation the normal
+    path does — switching with unloaded weights must raise regardless of
+    the destination."""
+    prog = api.Program(pipeline_graph(), pipeline_strategies())
+    xv, w1v, w2v, _ = pipeline_values()
+    sess = api.Session(prog, "tp-pipeline")
+    sess.load({"W1": w1v})  # W2 still unloaded
+    with pytest.raises(ValueError, match="unloaded parameters.*W2"):
+        sess.switch("tp-pipeline")
+    sess.load({"W2": w2v})
+    assert sess.switch("tp-pipeline").message_count == 0  # now a no-op
+
+
+def test_get_executor_rejects_unknown_kwargs():
+    """Regression: get_executor("sim", reduction=...) silently dropped
+    all kwargs — typo'd options must fail loudly for both executors."""
+    assert api.get_executor("sim").name == "sim"
+    assert api.get_executor("jax", reduction="fast").name == "jax"
+    with pytest.raises(TypeError, match="no options.*reduction"):
+        api.get_executor("sim", reduction="fast")
+    with pytest.raises(TypeError, match="reductoin"):
+        api.get_executor("jax", reductoin="fast")
+    with pytest.raises(ValueError, match="unknown executor"):
+        api.get_executor("tpu")
+
+
 def test_weights_program_and_dp_strategy_helpers():
     shapes = {"a": (8, 4), "b": (6, 2), "scalar": ()}
     full = api.data_parallel_strategy("full", [0, 1, 2, 3], shapes)

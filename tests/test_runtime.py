@@ -90,6 +90,25 @@ def test_api_session_executor_parity(report, ndev):
     assert case["devices"] == ndev
 
 
+@pytest.mark.parametrize("ndev", NDEVS)
+def test_api_pipeline_schedule_parity(report, ndev):
+    """Microbatched pipeline acceptance: Session.run(num_microbatches=m)
+    is bit-exact sim vs jax (one scanned shard_map program) per
+    microbatch, bit-identical across m in {1,2,4} for the accumulated
+    loss, GPipe == 1F1B bitwise, timetable matching the analytic
+    (m + s - 1) fill/drain count."""
+    case = _case(report, f"api:pipeline/{ndev}")
+    assert case["n_stages"] == 2
+    assert case["slots"] == 2 * (4 + case["n_stages"] - 1)
+
+
+def test_grouped_reduce_collectives(report):
+    """Reduce groups lower onto axis_index_groups subgroup collectives
+    (SplitAR's cross-subgroup groups), bit-exact vs the simulator."""
+    case = _case(report, "grouped:reduce/4")
+    assert case["grouped"] == case["reduce_groups"] > 0
+
+
 def test_ppermute_fusion_reduces_launches(report):
     """Per-(src,dst) ppermute pairs are fused into batched permutes: the
     AG/8 multicast lowers to strictly fewer collective launches than

@@ -1,0 +1,346 @@
+"""Pipeline schedule engine: 1F1B/GPipe tick-table properties, microbatch
+role propagation, Session.run(num_microbatches=m) semantics on the
+SimulatorExecutor (multi-device JaxExecutor parity runs in the subprocess
+selftest's ``api:pipeline/*`` cases), and the costmodel's overlap-aware
+fill/drain calibration against the engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.costmodel import fill_drain_count
+from repro.core.op_semantics import (MB_DUP, MB_PARTIAL, MicrobatchError,
+                                     microbatch_role)
+from repro.core.schedule import (PipelineSchedule, ScheduleError, Tick,
+                                 build_schedule, microbatch_roles, validate)
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a 2-stage pipeline program ending in an accumulated loss
+# ---------------------------------------------------------------------------
+
+def loss_pipeline_program():
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W1", (16, 12))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"), name="H")
+    g.comm(h, name="H2")
+    g.parameter("W2", (12, 6))
+    y = g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+    g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+    strat = api.Strategy("pipe", {
+        "X": api.spmd([0, 1], api.DS({api.DUP: 2})),
+        "W1": api.spmd([0, 1], api.DS({1: 2})),
+        "H2": api.spmd([2, 3], api.DS({0: 2})),
+        "W2": api.spmd([2, 3], api.DS({api.DUP: 2})),
+    })
+    return api.Program(g, [strat])
+
+
+def loss_pipeline_values():
+    rng = np.random.default_rng(3)
+    xv = rng.integers(-4, 5, (16, 16)).astype(np.float32)
+    w1v = rng.integers(-4, 5, (16, 12)).astype(np.float32)
+    w2v = rng.integers(-4, 5, (12, 6)).astype(np.float32)
+    want_y = np.maximum(xv @ w1v, 0) @ w2v
+    return xv, w1v, w2v, want_y, want_y.sum()
+
+
+# ---------------------------------------------------------------------------
+# tick-table properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["1f1b", "gpipe"])
+@pytest.mark.parametrize("n_stages,m", [(1, 1), (1, 4), (2, 2), (3, 4),
+                                        (4, 8), (4, 2), (5, 16)])
+def test_schedule_shape_and_validity(kind, n_stages, m):
+    s = build_schedule(n_stages, m, kind)
+    validate(s)  # deps + one-tick-per-stage-per-slot + completeness
+    assert len(s.ticks) == 2 * n_stages * m
+    # both schedules share the fill/drain makespan under uniform ticks
+    assert s.n_slots == 2 * (m + n_stages - 1)
+    assert s.fill_drain_slots == fill_drain_count(m, n_stages)
+    assert s.stats().bubbles == n_stages * s.n_slots - len(s.ticks)
+    assert s.stats().p2p_messages == 2 * m * (n_stages - 1)
+
+
+def test_no_stage_runs_two_ticks_at_once():
+    for kind in ("1f1b", "gpipe"):
+        s = build_schedule(4, 8, kind)
+        busy = set()
+        for t in s.ticks:
+            assert (t.stage, t.slot) not in busy
+            busy.add((t.stage, t.slot))
+
+
+def test_1f1b_bounds_in_flight_by_stage_depth():
+    """1F1B's point: with m > S, at most S microbatches are in flight
+    (stage s holds at most S - s), while GPipe holds all m."""
+    n_stages, m = 4, 16
+    f = build_schedule(n_stages, m, "1f1b")
+    g = build_schedule(n_stages, m, "gpipe")
+    for s in range(n_stages):
+        assert f.peak_in_flight(s) == min(n_stages - s, m)
+        assert f.peak_in_flight(s) <= n_stages < m
+        assert g.peak_in_flight(s) == m
+    # at most s-1 microbatches are queued (warmed up) ahead of steady
+    # state at any stage; the steady-state fwd makes the in-flight peak
+    for s in range(n_stages):
+        warm = min(n_stages - 1 - s, m)
+        assert warm <= n_stages - 1
+
+
+def test_validate_rejects_broken_schedules():
+    s = build_schedule(3, 2, "1f1b")
+    # swap a fwd tick to before its producer stage
+    bad = [Tick(0, 2, 0, "fwd") if (t.stage, t.microbatch, t.phase) ==
+           (2, 0, "fwd") else t for t in s.ticks]
+    with pytest.raises(ScheduleError, match="precedes"):
+        validate(PipelineSchedule("1f1b", 3, 2, bad))
+    with pytest.raises(ScheduleError, match="unknown schedule"):
+        build_schedule(2, 2, "interleaved")
+    with pytest.raises(ScheduleError, match="at least one microbatch"):
+        build_schedule(2, 0)
+
+
+def test_simulator_rejects_unexecutable_timetable():
+    """The SimulatorExecutor genuinely interprets the timetable: a
+    hand-built schedule that runs stage 1 before stage 0 fails on the
+    missing stage-boundary input."""
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, _, _ = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    mplan = prog.compile_micro("pipe", 2)
+    good = prog.compile("pipe").schedule(2)
+    flipped = [Tick(t.slot, 1 - t.stage, t.microbatch, t.phase)
+               for t in good.ticks]
+    bad = PipelineSchedule("1f1b", 2, 2, sorted(
+        flipped, key=lambda t: (t.slot, t.stage)))
+    states = []
+    for j in range(2):
+        st = {"X": api.scatter(
+            np.split(xv, 2)[j],
+            mplan.graph.tensors["X"].annots[0])}
+        st["W1"], st["W2"] = sess.weights["W1"], sess.weights["W2"]
+        states.append(st)
+    with pytest.raises(ScheduleError, match="ran before its input"):
+        api.SimulatorExecutor().run_schedule(mplan, bad, states)
+
+
+# ---------------------------------------------------------------------------
+# microbatch role propagation
+# ---------------------------------------------------------------------------
+
+def test_roles_on_loss_pipeline():
+    prog = loss_pipeline_program()
+    roles = microbatch_roles(prog.graph)
+    assert roles["X"] == 0            # batch-split feed
+    assert roles["W1"] == roles["W2"] == MB_DUP
+    assert roles["H"] == roles["H2"] == roles["Y"] == 0
+    assert roles["L1"] == 0           # sum over features keeps batch dim
+    assert roles["L"] == MB_PARTIAL   # sum over batch -> accumulate
+
+
+def test_role_rules_reject_nonlinear_partial():
+    with pytest.raises(MicrobatchError, match="nonlinear"):
+        microbatch_role("relu", [MB_PARTIAL], {}, [2])
+    with pytest.raises(MicrobatchError, match="nonlinear"):
+        microbatch_role("mul", [MB_PARTIAL, MB_PARTIAL], {}, [2, 2])
+    with pytest.raises(MicrobatchError, match="incompatible"):
+        microbatch_role("add", [0, MB_DUP], {}, [2, 2])
+    with pytest.raises(MicrobatchError):
+        microbatch_role("dot", [MB_PARTIAL, MB_PARTIAL], {}, [2, 2])
+    # linear combinations stay Partial
+    assert microbatch_role("scale", [MB_PARTIAL], {}, [2]) == MB_PARTIAL
+    assert microbatch_role("add", [MB_PARTIAL, MB_PARTIAL], {},
+                           [2, 2]) == MB_PARTIAL
+    assert microbatch_role("mul", [MB_PARTIAL, MB_DUP], {},
+                           [2, 2]) == MB_PARTIAL
+    assert microbatch_role("dot", [MB_PARTIAL, MB_DUP], {},
+                           [2, 2]) == MB_PARTIAL
+    # contraction split over microbatches accumulates
+    assert microbatch_role("dot", [1, 0], {}, [2, 2]) == MB_PARTIAL
+    assert microbatch_role("transpose", [0], {"perm": (1, 0)}, [2]) == 1
+    assert microbatch_role("sum", [1], {"dim": 0}, [2]) == 0
+
+
+def test_micro_plan_scales_batch_shapes_only():
+    prog = loss_pipeline_program()
+    mplan = prog.compile_micro("pipe", 4)
+    assert mplan.shapes["X"] == (4, 16)
+    assert mplan.shapes["Y"] == (4, 6)
+    assert mplan.shapes["W1"] == (16, 12)     # Duplicate: unscaled
+    assert mplan.shapes["L"] == ()            # Partial: unscaled
+    assert mplan.num_microbatches == 4
+    # memoized like compile(); m=1 IS the full plan
+    assert prog.compile_micro("pipe", 4) is mplan
+    assert prog.compile_micro("pipe", 1) is prog.compile("pipe")
+
+
+def test_micro_plan_rejects_indivisible_batch():
+    prog = loss_pipeline_program()
+    with pytest.raises(MicrobatchError, match="not divisible"):
+        prog.compile_micro("pipe", 3)
+
+
+def test_micro_plan_binds_symbolic_batch_dim():
+    """Regression: a symbolic batch dim bound through shape_env must
+    microbatch (the env is in hand; only an UNBOUND symbol errors)."""
+    from repro.core.symbolic import Sym
+    g = api.Graph()
+    g.placeholder("X", (Sym("B"), 8))
+    g.parameter("W", (8, 4))
+    g.sum(g.sum(g.dot(g.tensors["X"], g.tensors["W"], name="Y"), 1,
+                name="L1"), 0, name="L")
+    strat = api.Strategy("s", {"X": api.spmd([0], api.DS({})),
+                               "W": api.spmd([0], api.DS({}))})
+    prog = api.Program(g, [strat])
+    mplan = prog.compile_micro("s", 2, shape_env={"B": 8})
+    assert mplan.shapes["X"] == (4, 8)
+    with pytest.raises(api.MicrobatchError, match="symbolic batch dim"):
+        prog.compile_micro("s", 2)
+    sess = api.Session(prog, "s", shape_env={"B": 8})
+    sess.load({"W": np.ones((8, 4), np.float32)})
+    out = sess.run({"X": np.ones((8, 8), np.float32)}, num_microbatches=2)
+    assert float(out.value("L")) == 8 * 8 * 4
+
+
+def test_validate_reports_incomplete_schedules():
+    """Regression: a truncated timetable must raise ScheduleError, not
+    leak a KeyError from the dependency lookup."""
+    with pytest.raises(ScheduleError, match="ticks scheduled"):
+        validate(PipelineSchedule("1f1b", 2, 1, [Tick(0, 1, 0, "fwd")]))
+    bad = [Tick(0, 0, 0, "fwd"), Tick(1, 0, 0, "bwd"),
+           Tick(0, 5, 0, "fwd"), Tick(1, 5, 0, "bwd")]  # stage 5 of 2
+    with pytest.raises(ScheduleError):
+        validate(PipelineSchedule("1f1b", 2, 1, bad))
+
+
+def test_run_rejects_unknown_schedule_for_any_m():
+    """Regression: a typo'd schedule kind used to pass silently when
+    num_microbatches == 1."""
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, _, _ = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    for m in (1, 2):
+        with pytest.raises(api.ScheduleError, match="unknown schedule"):
+            sess.run({"X": xv}, num_microbatches=m, schedule="1f1b_typo")
+
+
+# ---------------------------------------------------------------------------
+# Session.run(num_microbatches=m) on the SimulatorExecutor
+# ---------------------------------------------------------------------------
+
+def test_run_num_microbatches_1_is_the_unpipelined_path():
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, want_y, want_l = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    a = sess.run({"X": xv}, fetches=["Y", "L"])
+    b = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=1)
+    assert b.schedule is None and b.stats is None
+    for name in ("Y", "L"):
+        for dev, arr in a.shards(name).parts.items():
+            np.testing.assert_array_equal(b.shards(name).parts[dev], arr)
+
+
+@pytest.mark.parametrize("kind", ["1f1b", "gpipe"])
+@pytest.mark.parametrize("m", [2, 4])
+def test_run_microbatched_accumulates_loss_exactly(kind, m):
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, want_y, want_l = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    r = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=m,
+                 schedule=kind)
+    # integer-valued data: the microbatched loss sum is exact -> the
+    # result is bit-identical across m (and to the m=1 run)
+    assert float(r.value("L")) == float(want_l)
+    np.testing.assert_array_equal(r.value("Y"), want_y)
+    assert r.schedule.kind == kind
+    assert r.schedule.n_slots == 2 * (m + 2 - 1)
+    assert r.stats.p2p_messages == 2 * m
+
+
+def test_gpipe_and_1f1b_agree_bitwise():
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, _, _ = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    a = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=4,
+                 schedule="1f1b")
+    b = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=4,
+                 schedule="gpipe")
+    for name in ("Y", "L"):
+        for dev, arr in a.shards(name).parts.items():
+            np.testing.assert_array_equal(b.shards(name).parts[dev], arr)
+
+
+def test_run_microbatched_validates_feeds():
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, _, _ = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    with pytest.raises(ValueError, match="GLOBAL arrays"):
+        sess.run({"X": api.scatter(
+            xv, prog.graph.tensors["X"].annots[0])},
+            num_microbatches=2)
+    with pytest.raises(ValueError, match="unknown feeds"):
+        sess.run({"X": xv, "Z": xv}, num_microbatches=2)
+    with pytest.raises(ValueError, match="missing feed"):
+        sess.run({}, num_microbatches=2)
+
+
+def test_compiled_plan_surfaces_schedule():
+    prog = loss_pipeline_program()
+    plan = prog.compile("pipe")
+    assert plan.n_stages == 2
+    sched = plan.schedule(4)
+    assert plan.schedule(4) is sched          # memoized
+    assert sched.fill_drain_slots == fill_drain_count(4, plan.n_stages)
+    assert "stage 0" in sched.describe()
+
+
+def test_search_schedule_report():
+    """The strategy searcher surfaces the timetable its winner runs."""
+    from repro.core.costmodel import uniform_strategy, LLAMA_32B
+    from repro.scenarios.search import schedule_report
+    strat = uniform_strategy(list(range(16)), LLAMA_32B, dp=2, tp=2, pp=4,
+                             global_batch=64)
+    rep = schedule_report(strat)
+    assert "pipeline 0 [1f1b]" in rep and "pipeline 1" in rep
+    assert "bubbles" in rep
+
+
+# ---------------------------------------------------------------------------
+# costmodel calibration
+# ---------------------------------------------------------------------------
+
+def test_pipeline_time_overlaps_p2p_with_compute():
+    """Regression: stage-boundary P2P used to be serialized on top of the
+    fill/drain term (p2p * n_micro).  The overlap-aware estimate pays
+    max(compute, p2p) per slot plus each boundary's latency once."""
+    from repro.core.costmodel import (LLAMA_32B, PipelineSpec, Stage,
+                                      paper_cluster, pipeline_time,
+                                      stage_micro_time)
+    cluster = paper_cluster(16, 16)
+    stages = (Stage(tuple(range(8)), (0, 30)),
+              Stage(tuple(range(8, 16)), (30, 60)))
+    for m in (4, 16, 64):
+        p = PipelineSpec(stages, m, 1)
+        seq = 4096
+        micro_tokens = p.micro_bs * seq
+        times = [stage_micro_time(cluster, LLAMA_32B, st, micro_tokens, seq)
+                 for st in stages]
+        act = 2 * micro_tokens * LLAMA_32B.d_model
+        p2p = act / (cluster.link_gbps(7, 8) * 1e9)
+        got = pipeline_time(cluster, LLAMA_32B, p, seq)
+        slot = max(max(times), p2p)
+        want = fill_drain_count(m, 2) * slot + p2p
+        assert got == pytest.approx(want)
+        # strictly cheaper than the old double-counting formula
+        old = fill_drain_count(m, 2) * max(times) + p2p * m
+        assert got < old or p2p == 0
