@@ -40,8 +40,9 @@ from repro.core.comm_resolve import resolve
 from repro.core.graph import DeductionError, DeductionReport, Graph
 from repro.core.op_semantics import MicrobatchError
 from repro.core.plan import CommPlan
-from repro.core.schedule import (PipelineSchedule, ScheduleError,
-                                 ScheduleStats, Tick, build_schedule)
+from repro.core.schedule import (PipelineSchedule, PricedSchedule,
+                                 ScheduleError, ScheduleStats, Tick,
+                                 build_schedule, price_schedule)
 from repro.core.simulator import ShardedTensor, gather, scatter
 from repro.core.specialize import (ExecItem, ExecutableGraph, Pipeline,
                                    SpecializationResult)
@@ -66,11 +67,12 @@ __all__ = [
     "CommPlan", "CompileError", "CompiledPlan", "CostEstimate",
     "DeductionError", "DeductionReport", "ExecItem", "ExecutableGraph",
     "Executor", "Graph", "JaxExecutor", "MicrobatchError",
-    "NvlinkIbTopology", "Pipeline", "PipelineSchedule", "Program",
-    "RunResult", "ScheduleError", "ScheduleStats", "Session",
+    "NvlinkIbTopology", "Pipeline", "PipelineSchedule", "PricedSchedule",
+    "Program", "RunResult", "ScheduleError", "ScheduleStats", "Session",
     "ShardedTensor", "SimulatorExecutor", "SpecializationResult",
     "Strategy", "StrategyError", "SwitchOutcome", "SwitchReport", "Tick",
     "Topology", "UniformTopology", "build_schedule",
     "data_parallel_strategy", "estimate_switch", "gather", "get_executor",
-    "plan_tensor_switch", "resolve", "scatter", "weights_graph",
+    "plan_tensor_switch", "price_schedule", "resolve", "scatter",
+    "weights_graph",
 ]

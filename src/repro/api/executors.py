@@ -25,13 +25,15 @@ kernels (gelu) may differ in the final ulp between numpy and XLA.
 
 Microbatched pipeline execution (``Session.run(num_microbatches=m)``)
 goes through :meth:`run_schedule`: the SimulatorExecutor *interprets the
-1F1B/GPipe timetable tick by tick* — each forward tick executes exactly
-the ops progressive specialization assigned to that pipeline stage, for
-that microbatch, so an unexecutable schedule fails loudly — while the
-JaxExecutor lowers all microbatches into ONE shard_map program
-(``lax.scan`` over the microbatch axis; XLA's dependence order realizes
-the same pipeline).  Both return *per-microbatch* outputs; the Session
-combines them with one shared reduction rule.
+1F1B / GPipe / interleaved timetable tick by tick* — each forward tick
+executes exactly the ops progressive specialization assigned to that
+(virtual) pipeline stage, for that microbatch, so an unexecutable
+schedule fails loudly — while the JaxExecutor lowers all microbatches
+into ONE shard_map program (``lax.scan`` over the microbatch axis; XLA's
+dependence order realizes the same pipeline, and a device holding ``v``
+interleaved chunks simply has all its chunks' ops in its ``lax.switch``
+branch).  Both return *per-microbatch* outputs; the Session combines
+them with one shared reduction rule.
 """
 
 from __future__ import annotations
@@ -139,9 +141,11 @@ class SimulatorExecutor:
                      fetches: Sequence[str] | None = None
                      ) -> list[dict[str, ShardedTensor]]:
         """Interpret the timetable: each forward tick runs exactly the
-        ops of its pipeline stage for its microbatch (backward ticks are
-        schedule structure only — the graph IR is forward-mode).  A
-        schedule that violates dataflow (a stage ticking before its
+        ops of its (virtual) pipeline stage for its microbatch (backward
+        ticks are schedule structure only — the graph IR is
+        forward-mode).  Interleaved schedules index ops by virtual
+        stage: chunk ``tick.stage // S`` on device ``tick.stage % S``.
+        A schedule that violates dataflow (a stage ticking before its
         producer stage) fails on the missing input."""
         if len(states) != schedule.num_microbatches:
             raise ScheduleError(
@@ -155,8 +159,11 @@ class SimulatorExecutor:
         graph, k = compiled.graph, compiled.strategy_index
         plans = {id(rc.op): rc.plan for rc in
                  compiled.specialization.resolved}
-        stage_of = assign_stages(graph, k,
-                                 compiled.specialization.pipelines)
+        # raises if the graph's chunk count exceeds the schedule's v —
+        # a v>1 plan handed a plain 1F1B/GPipe table fails here loudly
+        stage_of = assign_stages(
+            graph, k, compiled.specialization.pipelines,
+            virtual_stages_per_device=schedule.virtual_per_stage)
         ops_by_stage: dict[int, list] = {}
         for op in graph.ops:
             if op.kind in ("placeholder", "parameter"):
@@ -232,7 +239,10 @@ class JaxExecutor:
         the stacked microbatch axis, keeping the per-device ``lax.switch``
         branches of the unpipelined path.  The explicit timetable is the
         simulator's contract; on real devices XLA's dependence order
-        realizes the same pipeline, so the schedule only sizes the
+        realizes the same pipeline — including interleaved virtual
+        stages, where a device's branch contains the ops of ALL its
+        chunks and the cross-chunk comm lowerings route activations
+        around the ring ``v`` times — so the schedule only sizes the
         program here."""
         if len(states) != schedule.num_microbatches:
             raise ScheduleError(

@@ -18,7 +18,8 @@ from repro.core import op_semantics
 from repro.core.graph import DeductionReport, Graph
 from repro.core.plan import CommPlan
 from repro.core.schedule import (PipelineSchedule, build_schedule,
-                                 microbatch_graph, microbatch_roles)
+                                 infer_virtual_stages, microbatch_graph,
+                                 microbatch_roles)
 from repro.core.specialize import (ExecItem, ExecutableGraph,
                                    SpecializationResult, specialize_all)
 from repro.core.symbolic import bind_shape, free_symbols
@@ -76,6 +77,7 @@ class CompiledPlan:
     num_microbatches: int = 1
     mb_roles: dict[str, int] | None = None
     _schedules: dict = field(default_factory=dict, repr=False)
+    _n_virtual: int | None = field(default=None, repr=False)
 
     @property
     def devices(self) -> tuple[int, ...]:
@@ -83,19 +85,41 @@ class CompiledPlan:
 
     @property
     def n_stages(self) -> int:
-        """Pipeline depth of this strategy (1 when nothing is staged)."""
+        """PHYSICAL pipeline depth of this strategy (1 when nothing is
+        staged); with interleaving each physical stage holds
+        ``virtual_stages_per_device`` model chunks."""
         return max((len(p.stages)
                     for p in self.specialization.pipelines), default=1)
 
-    def schedule(self, num_microbatches: int,
-                 kind: str = "1f1b") -> PipelineSchedule:
+    @property
+    def virtual_stages_per_device(self) -> int:
+        """Megatron's ``v``: how many model chunks this graph's dataflow
+        places on each physical stage (1 unless the strategy routes the
+        graph around the device ring more than once — such plans can
+        only be scheduled with ``schedule="interleaved"``)."""
+        if self._n_virtual is None:
+            self._n_virtual = infer_virtual_stages(
+                self.graph, self.strategy_index,
+                self.specialization.pipelines)
+        return self._n_virtual
+
+    def schedule(self, num_microbatches: int, kind: str = "1f1b",
+                 virtual_stages_per_device: int | None = None
+                 ) -> PipelineSchedule:
         """The explicit (slot, stage, microbatch, phase) timetable this
-        plan's pipelines follow for ``num_microbatches`` (memoized)."""
-        key = (num_microbatches, kind)
+        plan's pipelines follow for ``num_microbatches`` (memoized).
+        ``kind="interleaved"`` defaults ``virtual_stages_per_device`` to
+        the plan's deduced chunk count; other kinds require v=1."""
+        v = virtual_stages_per_device
+        if v is None:
+            v = self.virtual_stages_per_device if kind == "interleaved" \
+                else 1
+        key = (num_microbatches, kind, v)
         cached = self._schedules.get(key)
         if cached is None:
             cached = self._schedules[key] = build_schedule(
-                self.n_stages, num_microbatches, kind)
+                self.n_stages, num_microbatches, kind,
+                virtual_stages_per_device=v)
         return cached
 
     @property

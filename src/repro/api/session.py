@@ -34,7 +34,13 @@ class RunResult:
     """One step's fetched tensors, sharded per the active strategy.
 
     Microbatched runs also carry the pipeline ``schedule`` that was
-    executed (``stats`` summarizes its ticks/bubbles/messages)."""
+    executed.  ``stats`` summarizes it as a
+    :class:`~repro.core.schedule.ScheduleStats`: tick / bubble / p2p
+    counts plus the *priced* ``makespan`` and ``bubble_fraction``
+    (uniform tick durations here, so makespan == slot count; re-price
+    with real per-(stage, phase) costs via
+    ``result.schedule.stats(durations)`` or
+    ``core.schedule.price_schedule``)."""
 
     outputs: dict[str, ShardedTensor]
     schedule: PipelineSchedule | None = None
@@ -100,22 +106,45 @@ class Session:
     def run(self, feeds: Mapping[str, object] | None = None,
             fetches: Sequence[str] | None = None, *,
             num_microbatches: int = 1,
-            schedule: str = "1f1b") -> RunResult:
+            schedule: str = "1f1b",
+            virtual_stages_per_device: int | None = None) -> RunResult:
         """Execute one step: placeholders come from ``feeds`` (global
         arrays or ShardedTensors), parameters from session state.
 
         With ``num_microbatches=m > 1`` the step runs as a pipeline:
         batch-dim feeds are split into ``m`` microbatches, the plan's
-        pipelines execute the explicit ``schedule`` ("1f1b" or "gpipe")
-        timetable, and per-microbatch outputs are reduced by their
-        microbatch role — losses/gradients (Partial) accumulate in
-        microbatch order, batch-split outputs concatenate, parameters
+        pipelines execute the explicit ``schedule`` ("1f1b", "gpipe" or
+        "interleaved") timetable, and per-microbatch outputs are reduced
+        by their microbatch role — losses/gradients (Partial) accumulate
+        in microbatch order, batch-split outputs concatenate, parameters
         (Duplicate) pass through.  ``m=1`` is exactly the unpipelined
-        path."""
+        path.
+
+        ``schedule="interleaved"`` runs Megatron's virtual-stage 1F1B:
+        each physical stage holds ``virtual_stages_per_device`` model
+        chunks (default: the plan's deduced chunk count — how many times
+        the strategy routes the dataflow around the device ring), the
+        timetable spans ``S*v`` virtual stages, and ``m`` must be
+        divisible by (or at most) the physical stage count.  Plans whose
+        dataflow wraps (v > 1) can ONLY run interleaved; ``"1f1b"`` /
+        ``"gpipe"`` on them raise :class:`ScheduleError`.
+
+        The executed timetable comes back on ``RunResult.schedule``;
+        ``RunResult.stats`` summarizes it (ticks, bubbles, p2p messages,
+        and the priced makespan / bubble fraction — uniform tick
+        durations here; pass costmodel durations to
+        ``result.schedule.stats(durations)`` to price a real cluster).
+        """
         feeds = dict(feeds or {})
-        if schedule not in SCHEDULES:  # fail for every m, not just m > 1
+        # knob validation fails for every m, not just m > 1
+        if schedule not in SCHEDULES:
             raise ScheduleError(
                 f"unknown schedule {schedule!r} (have {SCHEDULES})")
+        v = virtual_stages_per_device
+        if schedule != "interleaved" and v not in (None, 1):
+            raise ScheduleError(
+                f"virtual_stages_per_device={v} requires "
+                f"schedule='interleaved' (got {schedule!r})")
         if num_microbatches == 1:
             state = self._leaf_state(feeds)
             outs = self.executor.run(self.plan, state, fetches)
@@ -123,7 +152,21 @@ class Session:
         mplan = self.program.compile_micro(
             self.plan.strategy_index, num_microbatches,
             shape_env=self.shape_env, topology=self.topology)
-        sched = self.plan.schedule(num_microbatches, schedule)
+        inferred = mplan.virtual_stages_per_device
+        if schedule == "interleaved":
+            v = inferred if v is None else v
+            if v < inferred:
+                raise ScheduleError(
+                    f"plan interleaves {inferred} chunk(s) per device; "
+                    f"virtual_stages_per_device={v} is too small")
+        else:
+            if inferred > 1:
+                raise ScheduleError(
+                    f"plan interleaves {inferred} chunks per device; "
+                    f"run it with schedule='interleaved'")
+            v = 1
+        sched = self.plan.schedule(num_microbatches, schedule,
+                                   virtual_stages_per_device=v)
         micro_feeds = self._split_feeds(feeds, mplan)
         states = []
         for j in range(num_microbatches):

@@ -1,0 +1,67 @@
+"""Shared differential-test fixtures for the `repro.api` surface.
+
+Lives in ``src/`` (not ``tests/``) because the same program builders are
+consumed by both the pytest suite and the subprocess runtime selftest
+(``repro.runtime.selftest``) — one definition, so the two can never
+drift apart.  Import is side-effect free (no jax, no device forcing).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import api
+
+
+def zigzag_program(n: int = 4, name: str = "zig") -> "api.Program":
+    """A 2-physical-stage program whose dataflow crosses the stage
+    boundary three times (s0 -> s1 -> s0 -> s1): Megatron's v=2
+    interleaved chunk layout, expressible only as virtual stages.
+
+    Devices ``0..n/2-1`` form stage 0, the rest stage 1; activations are
+    row-split within a stage (every stage-0 device is a P2P sender, so
+    pipeline construction sees symmetric parallel chains).
+    """
+    half = n // 2
+    s0, s1 = list(range(half)), list(range(half, n))
+    row = api.DS({0: half}) if half > 1 else api.DS({})
+    dup = api.DS({api.DUP: half})
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W1", (16, 12))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"),
+               name="H")
+    g.comm(h, name="H2")                     # -> stage 1   (chunk 0)
+    g.parameter("W2", (12, 10))
+    y1 = g.dot(g.tensors["H2"], g.tensors["W2"], name="Y1")
+    g.comm(y1, name="Y2")                    # -> stage 0   (chunk 1!)
+    g.parameter("W3", (10, 8))
+    y4 = g.relu(g.dot(g.tensors["Y2"], g.tensors["W3"], name="Y3"),
+                name="Y4")
+    g.comm(y4, name="Y5")                    # -> stage 1   (chunk 1)
+    g.parameter("W4", (8, 6))
+    y = g.dot(g.tensors["Y5"], g.tensors["W4"], name="Y")
+    g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+    strat = api.Strategy(name, {
+        "X": api.spmd(s0, row), "W1": api.spmd(s0, dup),
+        "H2": api.spmd(s1, row), "W2": api.spmd(s1, dup),
+        "Y2": api.spmd(s0, row), "W3": api.spmd(s0, dup),
+        "Y5": api.spmd(s1, row), "W4": api.spmd(s1, dup),
+    })
+    return api.Program(g, [strat])
+
+
+def zigzag_values(seed: int = 11):
+    """Integer-valued leaves (exact under float32 summation) and the
+    expected full-batch ``Y`` for :func:`zigzag_program`."""
+    rng = np.random.default_rng(seed)
+    xv = rng.integers(-4, 5, (16, 16)).astype(np.float32)
+    ws = {f"W{i}": rng.integers(-2, 3, shp).astype(np.float32)
+          for i, shp in [(1, (16, 12)), (2, (12, 10)), (3, (10, 8)),
+                         (4, (8, 6))]}
+    want_y = np.maximum(xv @ ws["W1"], 0) @ ws["W2"]
+    want_y = np.maximum(want_y @ ws["W3"], 0) @ ws["W4"]
+    return xv, ws, want_y
+
+
+__all__ = ["zigzag_program", "zigzag_values"]

@@ -14,7 +14,11 @@ micro-batch schedule.  This mirrors the paper's Appendix A.2/A.3 strategy
 tables, which are encoded verbatim as fixtures in the benchmarks.
 
 Per-step time =
-  pipeline fill/drain (1F1B or GPipe) over per-stage microbatch times
+  the PRICED pipeline timetable (1F1B or GPipe; the executable tick
+    table from ``core.schedule`` re-timed under per-(stage, phase)
+    durations — ``stage_tick_times`` — so non-uniform stage splits are
+    scored by the schedule they'd run; uniform stages keep the
+    ``fill_drain_count`` closed form, asserted equal)
   + cross-pipeline gradient sync (heterogeneous DP -> SplitAR over the
     HSPMD annotations, costed per link)
 and per-stage microbatch time =
@@ -143,31 +147,108 @@ def fill_drain_count(n_micro: int, n_stages: int) -> int:
     the same shape the schedule engine's timetables span
     (``core.schedule.build_schedule(...).fill_drain_slots``), kept as one
     definition so the analytic model and the executable schedules cannot
-    drift."""
+    drift.  Exact only for UNIFORM stage costs; non-uniform stages are
+    priced by the executable timetable itself (``pipeline_time`` →
+    ``core.schedule.price_schedule``)."""
     return n_micro + n_stages - 1
 
 
-def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
-                  seq_len: int) -> float:
+# fwd : bwd tick split of one stage-microbatch (bwd recomputes the two
+# matmul operands -> the canonical 1:2 ratio); the priced makespan of a
+# uniform pipeline is invariant to this split (the critical path holds
+# fill-count fwd ticks AND fill-count bwd ticks), so the uniform closed
+# form stays exact for any fraction.
+FWD_TIME_FRACTION = 1.0 / 3.0
+
+
+def stage_tick_times(cluster: ClusterSpec, model: ModelSpec, st: Stage,
+                     micro_tokens: int, seq_len: int) -> tuple[float, float]:
+    """(fwd, bwd) seconds of one microbatch through one stage — the
+    non-uniform tick durations the schedule engine prices."""
+    t = stage_micro_time(cluster, model, st, micro_tokens, seq_len)
+    return t * FWD_TIME_FRACTION, t * (1.0 - FWD_TIME_FRACTION)
+
+
+def _stage_p2p_times(cluster: ClusterSpec, model: ModelSpec,
+                     p: PipelineSpec, seq_len: int) -> list[float]:
+    """Per-boundary activation transfer seconds for one microbatch."""
     micro_tokens = p.micro_bs * seq_len
-    times = [stage_micro_time(cluster, model, st, micro_tokens, seq_len)
-             for st in p.stages]
-    # stage-boundary P2P per microbatch, per boundary
-    p2p_each = []
+    out = []
     for a, b in zip(p.stages[:-1], p.stages[1:]):
         act_bytes = 2 * micro_tokens * model.d_model
         link = cluster.link_gbps(a.ranks[-1], b.ranks[0])
-        p2p_each.append(act_bytes / (link * 1e9))
-    bottleneck = max(times)
-    # 1F1B/GPipe overlap stage-boundary sends with the next microbatch's
-    # compute: in steady state a slot costs the max of the compute
-    # bottleneck and the slowest boundary transfer (not their sum per
-    # microbatch — the old model double-counted transfers the schedule
-    # hides).  The fill ramp additionally pays each boundary's latency
-    # once, when the first microbatch traverses the pipeline.
-    slot = max([bottleneck] + p2p_each)
-    fill = fill_drain_count(p.n_micro, len(p.stages))
-    return fill * slot + sum(p2p_each)
+        out.append(act_bytes / (link * 1e9))
+    return out
+
+
+def pipeline_tick_durations(cluster: ClusterSpec, model: ModelSpec,
+                            p: PipelineSpec, seq_len: int
+                            ) -> dict[tuple[int, str], float]:
+    """``(stage, phase) -> seconds`` for ``core.schedule.price_schedule``.
+
+    Per stage, the steady-state slot must cover both the stage's compute
+    and the slowest stage-boundary transfer it has to hide (the schedule
+    overlaps sends with the next microbatch's compute), so each tick is
+    ``max(stage time, slowest boundary) * phase fraction``."""
+    micro_tokens = p.micro_bs * seq_len
+    p2p_max = max(_stage_p2p_times(cluster, model, p, seq_len), default=0.0)
+    out: dict[tuple[int, str], float] = {}
+    for s, st in enumerate(p.stages):
+        slot = max(stage_micro_time(cluster, model, st, micro_tokens,
+                                    seq_len), p2p_max)
+        out[(s, "fwd")] = slot * FWD_TIME_FRACTION
+        out[(s, "bwd")] = slot * (1.0 - FWD_TIME_FRACTION)
+    return out
+
+
+def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
+                  seq_len: int, kind: str = "1f1b") -> float:
+    """Seconds for one step of one pipeline, priced from the executable
+    timetable: ``core.schedule.build_schedule`` emits the 1F1B/GPipe
+    tick table the executors would run and ``price_schedule`` re-times
+    it under the per-(stage, phase) durations above, so heterogeneous
+    stage splits are scored by the schedule they'd actually execute
+    (a non-bottleneck fill ramp no longer pays bottleneck price).  The
+    fill ramp additionally pays each boundary's latency once, when the
+    first microbatch traverses the pipeline.
+
+    Uniform stage costs keep the closed-form fast path
+    ``fill_drain_count(m, S) * slot + sum(p2p)`` — asserted equal to the
+    priced timetable, so the two definitions cannot drift.
+    """
+    from .schedule import build_schedule, price_schedule
+
+    if kind not in ("1f1b", "gpipe", "interleaved"):
+        raise ValueError(f"unknown schedule kind {kind!r} "
+                         f"(have: 1f1b, gpipe, interleaved)")
+    micro_tokens = p.micro_bs * seq_len
+    times = [stage_micro_time(cluster, model, st, micro_tokens, seq_len)
+             for st in p.stages]
+    p2p_each = _stage_p2p_times(cluster, model, p, seq_len)
+    p2p_max = max(p2p_each, default=0.0)
+
+    def t_priced() -> float:
+        # analytic PipelineSpecs carry no chunk layout, so "interleaved"
+        # prices as its v=1 degenerate (the 1F1B table)
+        durations: dict[tuple[int, str], float] = {}
+        for s, t in enumerate(times):
+            slot = max(t, p2p_max)
+            durations[(s, "fwd")] = slot * FWD_TIME_FRACTION
+            durations[(s, "bwd")] = slot * (1.0 - FWD_TIME_FRACTION)
+        sched = build_schedule(len(p.stages), p.n_micro,
+                               "gpipe" if kind == "gpipe" else "1f1b")
+        return price_schedule(sched, durations).makespan + sum(p2p_each)
+
+    if all(t == times[0] for t in times[1:]):       # uniform fast path
+        slot = max([times[0]] + p2p_each)
+        t_uniform = fill_drain_count(p.n_micro, len(p.stages)) * slot \
+            + sum(p2p_each)
+        # assertion-only pricing: the O(m*S) tick table is built solely
+        # to pin uniform == priced (also regression-tested), and is
+        # skipped entirely under python -O
+        assert math.isclose(t_priced(), t_uniform, rel_tol=1e-9)
+        return t_uniform
+    return t_priced()
 
 
 def dp_sync_time(cluster: ClusterSpec, model: ModelSpec,
@@ -201,7 +282,8 @@ def dp_sync_time(cluster: ClusterSpec, model: ModelSpec,
 
 def step_time(cluster: ClusterSpec, model: ModelSpec, strat: Strategy,
               seq_len: int) -> float:
-    t_pipe = max(pipeline_time(cluster, model, p, seq_len)
+    t_pipe = max(pipeline_time(cluster, model, p, seq_len,
+                               kind=strat.schedule)
                  for p in strat.pipelines)
     return t_pipe + dp_sync_time(cluster, model, strat)
 

@@ -259,12 +259,12 @@ def construct_pipelines(graph: Graph, strategy: int = 0,
             has_pred.add(rd)
 
     pipelines = []
-    for root in sorted(stages):
-        if root in has_pred:
-            continue
+    visited_any: set[int] = set()
+
+    def walk(root: int) -> Pipeline:
         pipe = Pipeline()
         frontier = [root]
-        seen = set()
+        seen: set[int] = set()
         while frontier:
             stage_devs = set()
             nxt = []
@@ -277,5 +277,20 @@ def construct_pipelines(graph: Graph, strategy: int = 0,
             if stage_devs:
                 pipe.stages.append(stage_devs)
             frontier = nxt
-        pipelines.append(pipe)
+        visited_any.update(seen)
+        return pipe
+
+    for root in sorted(stages):
+        if root in has_pred:
+            continue
+        pipelines.append(walk(root))
+    # Interleaved dataflow (virtual stages, paper §5.4 + Megatron's
+    # virtual-pipeline layout) wraps the last stage's P2P back to the
+    # first, so every stage group has a predecessor and no pred-less
+    # root exists.  Start such cyclic chains from the earliest P2P
+    # sender in CommOp order — the stage the first microbatch enters.
+    for s, _ in successors:
+        rs = find(s)
+        if rs in stages and rs not in visited_any:
+            pipelines.append(walk(rs))
     return pipelines

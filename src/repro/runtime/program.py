@@ -53,7 +53,18 @@ class LoweredGraph:
     pipeline schedule's work, expressed as one XLA program whose
     dependence order realizes the same 1F1B/GPipe overlap.  The graph
     passed in must then be the MICRO graph (shapes already scaled;
-    ``Program.compile_micro``)."""
+    ``Program.compile_micro``).
+
+    Interleaved virtual stages (Megatron's ``v`` chunks per device;
+    ``schedule.infer_virtual_stages``) need no special lowering: a
+    device holding ``v`` chunks simply contributes the ops of ALL its
+    chunks to its switch branch, and the wrap-around CommOps route
+    activations around the device ring ``v`` times inside the same
+    scanned body.  ``n_virtual_stages`` surfaces the deduced chunk
+    structure (``n_stages * v``) for introspection — the explicit
+    interleaved timetable remains the SimulatorExecutor's contract,
+    checked bit-exactly against this program by the
+    ``api:pipeline/interleaved*`` selftest cases."""
 
     def __init__(self, graph: Graph, strategy: int = 0, *,
                  shape_env: dict[str, int] | None = None, mesh=None,
@@ -75,6 +86,9 @@ class LoweredGraph:
                        for name, t in graph.tensors.items()}
         resolved = resolve_comm_ops(graph, strategy, topology, shape_env)
         self._plans = {id(rc.op): rc.plan for rc in resolved}
+        # kept for the lazy pipeline/chunk introspection properties
+        self._resolved_comms = resolved
+        self._pipelines: "list | None" = None
 
         devs: set[int] = set()
         for t in graph.tensors.values():
@@ -202,6 +216,29 @@ class LoweredGraph:
         jitted = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
                                    out_specs=out_specs, check_rep=False))
         self.fn = maybe_x64(jitted, has_reduce and reduction == "exact")
+
+    # -- introspection (lazy: not on the lowering/execution path) ----------
+
+    @property
+    def pipelines(self):
+        """Deduced pipeline structure (shares the lowering's comm
+        resolution); computed on first access."""
+        if self._pipelines is None:
+            from repro.core.specialize import construct_pipelines
+            self._pipelines = construct_pipelines(
+                self.graph, self.k, resolved_comms=self._resolved_comms)
+        return self._pipelines
+
+    @property
+    def n_stages(self) -> int:
+        return max((p.n_stages for p in self.pipelines), default=1)
+
+    @property
+    def n_virtual_stages(self) -> int:
+        """Physical stages * interleave chunks (Megatron's ``S * v``)."""
+        from repro.core.schedule import infer_virtual_stages
+        return self.n_stages * infer_virtual_stages(
+            self.graph, self.k, self.pipelines)
 
     # -- pack / unpack -----------------------------------------------------
 

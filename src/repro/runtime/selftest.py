@@ -9,9 +9,12 @@ For 2/4/8 virtual devices it builds an annotation pair that resolves to
 each operator kind (ID, SR, AR, RS, AG, SplitAR, SplitRS, SplitAG, BSR,
 Slice), executes the plan bit-differentially against the simulator, and
 additionally checks: the fast psum reduction path (integer shards), the
-paper's Fig 9 heterogeneous multi-step stage, resharding round-trips, and
-the dynamic-switch weight migration through the fused-BSR path on the jax
-backend.  Emits one machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
+paper's Fig 9 heterogeneous multi-step stage, resharding round-trips, the
+dynamic-switch weight migration through the fused-BSR path on the jax
+backend, the microbatched pipeline schedules (``api:pipeline/*``:
+1F1B/GPipe over 2 stages, and ``api:pipeline/interleaved*``: Megatron's
+v=2 virtual-stage schedule over a zigzag plan), all bit-exact sim vs
+jax.  Emits one machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
 (consumed by ``tests/test_runtime.py``).
 """
 
@@ -331,6 +334,19 @@ def run_all(max_devices: int = 8) -> dict:
                         (ex.name, m, float(r.value("L")), float(want_l))
                     np.testing.assert_array_equal(r.value("Y"), want_y)
                     results[(ex.name, m)] = r
+                    # interleaved at v=1 degenerates to the same table:
+                    # bit-identical to 1F1B for every m
+                    ri = sess.run({"X": xv}, fetches=["Y", "L"],
+                                  num_microbatches=m,
+                                  schedule="interleaved")
+                    for name in ("Y", "L"):
+                        a = r.shards(name)
+                        b = ri.shards(name)
+                        for dev in a.parts:
+                            np.testing.assert_array_equal(
+                                b.parts[dev], a.parts[dev],
+                                err_msg=f"{name} m={m}: interleaved "
+                                        f"differs from 1f1b ({ex.name})")
                 rg = sess.run({"X": xv}, fetches=["Y", "L"],
                               num_microbatches=4, schedule="gpipe")
                 results[(ex.name, "gpipe")] = rg
@@ -355,10 +371,73 @@ def run_all(max_devices: int = 8) -> dict:
             assert sched.fill_drain_slots == \
                 fill_drain_count(4, plan.n_stages), \
                 (sched.fill_drain_slots, plan.n_stages)
+            # priced timetable reproduces the uniform closed form
+            assert sched.stats().makespan == float(
+                2 * fill_drain_count(4, plan.n_stages))
             return {"n_stages": plan.n_stages,
                     "slots": sched.n_slots,
                     "bubbles": sched.stats().bubbles}
         record(f"api:pipeline/{n}", pipeline_case)
+
+    # 7b. interleaved virtual-stage 1F1B: a plan whose dataflow crosses
+    #     the 2-device stage boundary three times (s0 -> s1 -> s0 -> s1,
+    #     Megatron's v=2 chunk layout).  The simulator interprets the
+    #     virtual-stage timetable tick by tick; the jax executor scans
+    #     the same zigzag graph in ONE shard_map program — bit-exact per
+    #     microbatch, and bit-identical to the unpipelined run across
+    #     m in {1,2,4} (integer-exact data)
+    for n, mesh in meshes.items():
+        def interleaved_case(n=n, mesh=mesh):
+            from repro import api
+            from repro.api.testing import zigzag_program, zigzag_values
+
+            prog = zigzag_program(n, name=f"zig{n}")
+            plan = prog.compile(f"zig{n}")
+            assert plan.n_stages == 2, plan.n_stages
+            assert plan.virtual_stages_per_device == 2
+
+            xv, ws, want_y = zigzag_values(seed=13)
+
+            results = {}
+            for ex in (api.SimulatorExecutor(), api.JaxExecutor(mesh)):
+                sess = api.Session(prog, f"zig{n}", executor=ex)
+                sess.load(ws)
+                for m in (1, 2, 4):
+                    r = sess.run({"X": xv}, fetches=["Y", "L"],
+                                 num_microbatches=m,
+                                 schedule="interleaved")
+                    np.testing.assert_array_equal(r.value("Y"), want_y)
+                    assert float(r.value("L")) == float(want_y.sum())
+                    results[(ex.name, m)] = r
+                # the wrapped plan refuses flat schedules
+                try:
+                    sess.run({"X": xv}, num_microbatches=2,
+                             schedule="1f1b")
+                except api.ScheduleError:
+                    pass
+                else:
+                    raise AssertionError("1f1b accepted a v=2 plan")
+            for m in (2, 4):
+                for name in ("Y", "L"):
+                    a = results[("sim", m)].shards(name)
+                    b = results[("jax", m)].shards(name)
+                    for dev in a.parts:
+                        np.testing.assert_array_equal(
+                            b.parts[dev], a.parts[dev],
+                            err_msg=f"{name} m={m} dev {dev}: jax "
+                                    f"differs from sim (interleaved)")
+            sched = results[("sim", 4)].schedule
+            assert sched.virtual_per_stage == 2
+            assert sched.n_virtual == 4
+            # the jax program deduces the same chunk structure
+            lw = api.JaxExecutor(mesh).lowered(
+                prog.compile_micro(f"zig{n}", 4), ["Y", "L"],
+                num_microbatches=4)
+            assert lw.n_virtual_stages == 4, lw.n_virtual_stages
+            return {"v": sched.virtual_per_stage,
+                    "slots": sched.n_slots,
+                    "bubble_fraction": sched.stats().bubble_fraction}
+        record(f"api:pipeline/interleaved{n}", interleaved_case)
 
     # 8. axis_index_groups subgroup reduces: a SplitAR plan lowers its
     #    cross-subgroup reduce groups onto grouped collectives (the kind

@@ -63,6 +63,26 @@ HETU_STRATEGIES = {
 }
 
 
+def priced_schedule_stats(cluster: ClusterSpec, model: ModelSpec,
+                          strat: Strategy, seq_len: int):
+    """Per-pipeline :class:`~repro.core.schedule.ScheduleStats` of the
+    timetables this strategy would execute, with tick durations priced
+    from the cost model per (stage, phase) — the paper's temporal
+    heterogeneity (§5, §7) made visible: the H20 stages' shorter layer
+    ranges yield shorter ticks, and the *priced* makespan / bubble
+    fraction reflect the actual (non-uniform) fill/drain shape rather
+    than bottleneck-uniform slot counts."""
+    from repro.core.costmodel import pipeline_tick_durations
+    from repro.core.schedule import build_schedule
+
+    out = []
+    for p in strat.pipelines:
+        sched = build_schedule(len(p.stages), p.n_micro, strat.schedule)
+        out.append(sched.stats(
+            pipeline_tick_durations(cluster, model, p, seq_len)))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # strategy -> HSPMD annotations (per-layer weight placement)
 # ---------------------------------------------------------------------------

@@ -109,19 +109,20 @@ def _seq_flops(model: ModelSpec, length: int) -> float:
 
 def _pipeline_rate(cluster: ClusterSpec, p: PipelineSpec,
                    ref_len: int, model: ModelSpec) -> float:
-    """Effective FLOPs/s of one pipeline: per-stage TP-degraded compute
-    throughput, pipeline fill overhead included."""
-    from repro.core.costmodel import MFU, stage_micro_time
-    micro_tokens = max(p.micro_bs, 1) * ref_len
-    rate = 0.0
-    times = [stage_micro_time(cluster, model, st, micro_tokens, ref_len)
-             for st in p.stages]
-    stage_flops = [model.layer_flops(micro_tokens, ref_len) * st.n_layers
-                   for st in p.stages]
-    bottleneck = max(t for t in times)
-    per_micro = sum(stage_flops)
-    fill = (p.n_micro + len(p.stages) - 1) / max(p.n_micro, 1)
-    return per_micro / (bottleneck * fill)
+    """Effective FLOPs/s of one pipeline, scored by the PRICED timetable
+    it would execute (``costmodel.pipeline_time`` re-times the 1F1B tick
+    table under per-(stage, phase) durations), so heterogeneous stage
+    splits pay their own fill ramp instead of the uniform
+    ``(m + S - 1)/m`` bottleneck factor."""
+    from repro.core.costmodel import pipeline_time
+    if p.n_micro < 1 or p.micro_bs < 1:     # degenerate specs: clamp
+        p = dataclasses.replace(p, n_micro=max(p.n_micro, 1),
+                                micro_bs=max(p.micro_bs, 1))
+    micro_tokens = p.micro_bs * ref_len
+    per_micro = sum(model.layer_flops(micro_tokens, ref_len) * st.n_layers
+                    for st in p.stages)
+    t_step = pipeline_time(cluster, model, p, ref_len)
+    return per_micro * p.n_micro / t_step
 
 
 def _strategy_step_time(cluster, model, strat, seqs, context, *,

@@ -94,16 +94,24 @@ def search_hetero_strategy(cluster: ClusterSpec, model: ModelSpec,
     return best
 
 
-def schedule_report(strat: Strategy) -> str:
+def schedule_report(strat: Strategy, cluster: ClusterSpec | None = None,
+                    model: ModelSpec | None = None,
+                    seq_len: int = 4096) -> str:
     """Per-pipeline 1F1B/GPipe timetable stats for a found strategy —
-    the executable (`core.schedule`) counterpart of the fill/drain term
-    `step_time` prices, so searches can report the bubble shape their
-    winner actually runs."""
+    the executable (`core.schedule`) counterpart of the term `step_time`
+    prices, so searches can report the bubble shape their winner
+    actually runs.  With ``cluster`` + ``model`` the ticks are priced
+    per (stage, phase) from the cost model (non-uniform durations);
+    otherwise the makespan is in uniform slots."""
+    from repro.core.costmodel import pipeline_tick_durations
     from repro.core.schedule import build_schedule
 
     lines = []
     for i, p in enumerate(strat.pipelines):
         s = build_schedule(len(p.stages), p.n_micro, strat.schedule)
+        durations = None
+        if cluster is not None and model is not None:
+            durations = pipeline_tick_durations(cluster, model, p, seq_len)
         lines.append(f"pipeline {i} [{strat.schedule}]: "
-                     f"{s.stats().summary()}")
+                     f"{s.stats(durations).summary()}")
     return "\n".join(lines)

@@ -102,6 +102,19 @@ def test_api_pipeline_schedule_parity(report, ndev):
     assert case["slots"] == 2 * (4 + case["n_stages"] - 1)
 
 
+@pytest.mark.parametrize("ndev", NDEVS)
+def test_api_interleaved_schedule_parity(report, ndev):
+    """Interleaved virtual-stage acceptance: a v=2 zigzag plan
+    (s0 -> s1 -> s0 -> s1) runs Megatron's interleaved timetable on the
+    simulator and ONE scanned shard_map program on jax — bit-exact per
+    microbatch shard, bit-identical outputs across m in {1,2,4}, flat
+    1F1B/GPipe rejected, and the lowered jax program deduces the same
+    S*v=4 virtual-stage structure."""
+    case = _case(report, f"api:pipeline/interleaved{ndev}")
+    assert case["v"] == 2
+    assert 0.0 <= case["bubble_fraction"] < 1.0
+
+
 def test_grouped_reduce_collectives(report):
     """Reduce groups lower onto axis_index_groups subgroup collectives
     (SplitAR's cross-subgroup groups), bit-exact vs the simulator."""

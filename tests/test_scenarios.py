@@ -99,3 +99,43 @@ def test_strategy_search_homogeneous_sanity():
     _, t_uni = best_uniform(cluster, LLAMA_32B, ranks, 64, 4096)
     _, t_het = search_hetero_strategy(cluster, LLAMA_32B, ranks, 64, 4096)
     assert t_het <= t_uni * 1.25
+
+
+def test_hetero_strategies_scored_by_priced_timetable():
+    """The Table 5 strategies' step time comes from the priced timetable
+    they'd execute: `priced_schedule_stats` per pipeline agrees exactly
+    with `pipeline_time`'s non-uniform scoring (makespan + boundary
+    latencies)."""
+    import pytest
+    from repro.core.costmodel import (_stage_p2p_times, pipeline_time,
+                                      stage_micro_time)
+    from repro.scenarios.hetero import (hetu_32b_16h800_16h20,
+                                        priced_schedule_stats)
+    cluster = paper_cluster(16, 16)
+    strat = hetu_32b_16h800_16h20()
+    stats = priced_schedule_stats(cluster, LLAMA_32B, strat, 4096)
+    assert len(stats) == len(strat.pipelines)
+    for st, p in zip(stats, strat.pipelines):
+        # heterogeneous split -> genuinely non-uniform stage ticks
+        times = [stage_micro_time(cluster, LLAMA_32B, stage, 4096, 4096)
+                 for stage in p.stages]
+        assert len(set(times)) > 1
+        assert st.makespan > 0.0
+        assert 0.0 <= st.bubble_fraction < 1.0
+        p2p = sum(_stage_p2p_times(cluster, LLAMA_32B, p, 4096))
+        assert pipeline_time(cluster, LLAMA_32B, p, 4096) == \
+            pytest.approx(st.makespan + p2p, rel=1e-9)
+
+
+def test_search_schedule_report_priced():
+    """With cluster + model the searcher's schedule report prices the
+    ticks (non-uniform makespan in seconds, not slots)."""
+    from repro.core.costmodel import uniform_strategy
+    from repro.scenarios.search import schedule_report
+    cluster = paper_cluster(16, 16)
+    strat = uniform_strategy(list(range(16)), LLAMA_32B, dp=2, tp=2, pp=4,
+                             global_batch=64)
+    plain = schedule_report(strat)
+    priced = schedule_report(strat, cluster, LLAMA_32B, seq_len=4096)
+    assert "makespan" in plain and "makespan" in priced
+    assert plain != priced

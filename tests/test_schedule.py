@@ -9,6 +9,10 @@ import numpy as np
 import pytest
 
 from repro import api
+# the zigzag (v=2 interleaved) fixture is shared with the subprocess
+# runtime selftest — one definition, the two cannot drift
+from repro.api.testing import (zigzag_program as zigzag_pipeline_program,
+                               zigzag_values)
 from repro.core.costmodel import fill_drain_count
 from repro.core.op_semantics import (MB_DUP, MB_PARTIAL, MicrobatchError,
                                      microbatch_role)
@@ -99,9 +103,15 @@ def test_validate_rejects_broken_schedules():
     with pytest.raises(ScheduleError, match="precedes"):
         validate(PipelineSchedule("1f1b", 3, 2, bad))
     with pytest.raises(ScheduleError, match="unknown schedule"):
-        build_schedule(2, 2, "interleaved")
+        build_schedule(2, 2, "interleaved_typo")
     with pytest.raises(ScheduleError, match="at least one microbatch"):
         build_schedule(2, 0)
+    # v > 1 is an interleaved-only knob
+    with pytest.raises(ScheduleError, match="requires kind='interleaved'"):
+        build_schedule(2, 2, "1f1b", virtual_stages_per_device=2)
+    # Megatron's constraint: m divisible by S (or a single group)
+    with pytest.raises(ScheduleError, match="divisible"):
+        build_schedule(4, 5, "interleaved", virtual_stages_per_device=2)
 
 
 def test_simulator_rejects_unexecutable_timetable():
@@ -127,6 +137,143 @@ def test_simulator_rejects_unexecutable_timetable():
         states.append(st)
     with pytest.raises(ScheduleError, match="ran before its input"):
         api.SimulatorExecutor().run_schedule(mplan, bad, states)
+
+
+# ---------------------------------------------------------------------------
+# interleaved (virtual-stage) 1F1B
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_stages,v,m", [(1, 2, 3), (2, 2, 2), (2, 2, 4),
+                                          (2, 3, 8), (3, 2, 6), (4, 2, 8),
+                                          (4, 3, 4), (2, 2, 1)])
+def test_interleaved_shape_and_validity(n_stages, v, m):
+    s = build_schedule(n_stages, m, "interleaved",
+                       virtual_stages_per_device=v)
+    validate(s)   # deps over S*v virtual stages + one tick/device/slot
+    assert s.virtual_per_stage == v
+    assert s.n_virtual == n_stages * v
+    assert len(s.ticks) == 2 * n_stages * v * m
+    # one tick per DEVICE per slot; every virtual stage maps to its
+    # Megatron device (chunk c of device s at virtual index c*S + s)
+    busy = set()
+    for t in s.ticks:
+        dev = s.device_of(t.stage)
+        assert dev == t.stage % n_stages
+        assert (dev, t.slot) not in busy
+        busy.add((dev, t.slot))
+    # uniform pricing reproduces the slot count exactly
+    st = s.stats()
+    assert st.makespan == float(s.n_slots)
+    assert 0.0 <= st.bubble_fraction < 1.0
+    assert st.bubbles == n_stages * s.n_slots - len(s.ticks)
+
+
+def test_interleaved_v1_is_exactly_1f1b():
+    for n_stages, m in [(1, 4), (2, 2), (3, 4), (4, 8)]:
+        a = build_schedule(n_stages, m, "1f1b")
+        b = build_schedule(n_stages, m, "interleaved",
+                           virtual_stages_per_device=1)
+        assert set(a.ticks) == set(b.ticks)
+        assert b.kind == "interleaved" and b.n_virtual == n_stages
+
+
+def test_interleaved_in_flight_bound():
+    """Each device holds at most warmup+1 in-flight microbatches —
+    Megatron's ``2*(S-1-s) + (v-1)*S + 1`` bound — strictly fewer than
+    the m*v a GPipe-style run of the chunked model would hold."""
+    n_stages, v, m = 4, 2, 8
+    s = build_schedule(n_stages, m, "interleaved",
+                       virtual_stages_per_device=v)
+    for dev in range(n_stages):
+        bound = min(2 * (n_stages - 1 - dev) + (v - 1) * n_stages,
+                    m * v) + 1
+        assert s.peak_in_flight_device(dev) <= bound
+        assert s.peak_in_flight_device(dev) < m * v
+
+
+def test_interleaved_shrinks_bubble_fraction():
+    """The point of interleaving: at the same per-device work, splitting
+    each stage into v chunks (ticks 1/v as long) cuts the fill/drain
+    bubble share."""
+    n_stages, m = 4, 8
+    flat = build_schedule(n_stages, m, "1f1b")
+    inter = build_schedule(n_stages, m, "interleaved",
+                           virtual_stages_per_device=2)
+    # price both in real time: a v=2 chunk tick is half a v=1 stage tick
+    t_flat = flat.stats({(s, ph): 1.0 for s in range(n_stages)
+                         for ph in ("fwd", "bwd")})
+    t_inter = inter.stats({(s, ph): 0.5 for s in range(inter.n_virtual)
+                           for ph in ("fwd", "bwd")})
+    assert t_inter.makespan < t_flat.makespan
+    assert t_inter.bubble_fraction < t_flat.bubble_fraction
+
+
+# ---------------------------------------------------------------------------
+# non-uniform (priced) ticks
+# ---------------------------------------------------------------------------
+
+def test_priced_uniform_reproduces_closed_form():
+    """With equal tick durations the priced makespan is exactly the
+    ``2*(m+S-1)`` uniform slot count, for every schedule kind."""
+    from repro.core.schedule import price_schedule
+    for kind in ("1f1b", "gpipe"):
+        for n_stages, m in [(1, 1), (2, 4), (3, 4), (4, 8), (5, 16)]:
+            s = build_schedule(n_stages, m, kind)
+            priced = price_schedule(s)     # uniform 1.0 ticks
+            assert priced.makespan == float(2 * (m + n_stages - 1))
+            assert priced.makespan == float(s.n_slots)
+
+
+def test_priced_makespan_monotone_in_any_tick():
+    """Growing any single (stage, phase) duration never shrinks the
+    makespan."""
+    from repro.core.schedule import price_schedule
+    s = build_schedule(3, 4, "1f1b")
+    base = {(st, ph): 1.0 for st in range(3) for ph in ("fwd", "bwd")}
+    m0 = price_schedule(s, base).makespan
+    for key in base:
+        bumped = dict(base)
+        bumped[key] = 1.5
+        assert price_schedule(s, bumped).makespan >= m0
+    # and the steady-state bottleneck strictly grows it
+    bumped = dict(base)
+    bumped[(1, "bwd")] = 2.0
+    assert price_schedule(s, bumped).makespan > m0
+
+
+def test_priced_respects_dependencies_and_device_serialization():
+    from repro.core.schedule import price_schedule
+    s = build_schedule(2, 4, "interleaved", virtual_stages_per_device=2)
+    durations = {(st, ph): 0.5 + 0.25 * st + (0.5 if ph == "bwd" else 0.0)
+                 for st in range(s.n_virtual) for ph in ("fwd", "bwd")}
+    priced = price_schedule(s, durations)
+    starts, finishes = priced.starts, priced.finishes
+    for (stage, j, phase), t0 in starts.items():
+        if phase == "fwd" and stage > 0:
+            assert finishes[(stage - 1, j, "fwd")] <= t0
+        if phase == "bwd":
+            assert finishes[(stage, j, "fwd")] <= t0
+            if stage < s.n_virtual - 1:
+                assert finishes[(stage + 1, j, "bwd")] <= t0
+    # no device overlaps itself
+    for dev in range(s.n_stages):
+        spans = sorted((starts[(t.stage, t.microbatch, t.phase)],
+                        finishes[(t.stage, t.microbatch, t.phase)])
+                       for t in s.device_ticks(dev))
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0
+    # busy time accounting
+    assert priced.makespan == max(finishes.values())
+    assert 0.0 <= priced.bubble_fraction < 1.0
+
+
+def test_price_schedule_rejects_invalid_timetable():
+    from repro.core.schedule import price_schedule
+    bad = PipelineSchedule("1f1b", 2, 1, [
+        Tick(0, 1, 0, "fwd"), Tick(1, 0, 0, "fwd"),
+        Tick(2, 1, 0, "bwd"), Tick(3, 0, 0, "bwd")])
+    with pytest.raises(ScheduleError, match="cannot price"):
+        price_schedule(bad)
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +441,67 @@ def test_run_microbatched_validates_feeds():
         sess.run({}, num_microbatches=2)
 
 
+def test_run_interleaved_degenerate_matches_1f1b_bitwise():
+    """On a v=1 plan ``schedule="interleaved"`` IS 1F1B — outputs are
+    bit-identical for every microbatch count."""
+    prog = loss_pipeline_program()
+    xv, w1v, w2v, _, _ = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": w1v, "W2": w2v})
+    for m in (1, 2, 4):
+        a = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=m,
+                     schedule="1f1b")
+        b = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=m,
+                     schedule="interleaved")
+        for name in ("Y", "L"):
+            for dev, arr in a.shards(name).parts.items():
+                np.testing.assert_array_equal(b.shards(name).parts[dev],
+                                              arr)
+        if m > 1:
+            assert b.schedule.kind == "interleaved"
+            assert b.schedule.virtual_per_stage == 1
+
+
+@pytest.mark.parametrize("m", [1, 2, 4])
+def test_run_interleaved_zigzag(m):
+    """The SimulatorExecutor interprets the virtual-stage timetable on a
+    plan whose dataflow wraps the device ring twice (v=2)."""
+    prog = zigzag_pipeline_program()
+    xv, ws, want_y = zigzag_values()
+    plan = prog.compile("zig")
+    assert plan.n_stages == 2
+    assert plan.virtual_stages_per_device == 2
+    sess = api.Session(prog, "zig")
+    sess.load(ws)
+    r = sess.run({"X": xv}, fetches=["Y", "L"], num_microbatches=m,
+                 schedule="interleaved")
+    np.testing.assert_array_equal(r.value("Y"), want_y)
+    assert float(r.value("L")) == float(want_y.sum())
+    if m > 1:
+        assert r.schedule.virtual_per_stage == 2
+        assert r.schedule.n_virtual == 4
+        assert r.stats.makespan == float(r.schedule.n_slots)
+
+
+def test_run_rejects_flat_schedules_on_interleaved_plan():
+    """A wrapped (v=2) plan cannot run plain 1F1B/GPipe — the timetable
+    would tick chunk-1 ops before their chunk-0 producers."""
+    prog = zigzag_pipeline_program()
+    xv, ws, _ = zigzag_values()
+    sess = api.Session(prog, "zig")
+    sess.load(ws)
+    for kind in ("1f1b", "gpipe"):
+        with pytest.raises(api.ScheduleError, match="interleave"):
+            sess.run({"X": xv}, num_microbatches=2, schedule=kind)
+    # and an explicit v below the plan's chunk count is rejected too
+    with pytest.raises(api.ScheduleError, match="too small"):
+        sess.run({"X": xv}, num_microbatches=2, schedule="interleaved",
+                 virtual_stages_per_device=1)
+    with pytest.raises(api.ScheduleError, match="interleaved"):
+        sess.run({"X": xv}, num_microbatches=2, schedule="1f1b",
+                 virtual_stages_per_device=2)
+
+
 def test_compiled_plan_surfaces_schedule():
     prog = loss_pipeline_program()
     plan = prog.compile("pipe")
@@ -344,3 +552,60 @@ def test_pipeline_time_overlaps_p2p_with_compute():
         # strictly cheaper than the old double-counting formula
         old = fill_drain_count(m, 2) * max(times) + p2p * m
         assert got < old or p2p == 0
+
+
+def test_uniform_closed_form_equals_priced_timetable():
+    """Regression (the `fill_drain_count` uniform assumption): on
+    uniform stage costs the closed-form fast path and the priced
+    timetable must agree exactly — pinned here so the two definitions
+    cannot drift."""
+    from repro.core.costmodel import (LLAMA_32B, PipelineSpec, Stage,
+                                      _stage_p2p_times, paper_cluster,
+                                      pipeline_tick_durations,
+                                      pipeline_time, stage_micro_time)
+    from repro.core.schedule import build_schedule, price_schedule
+    cluster = paper_cluster(16, 16)
+    stages = (Stage(tuple(range(8)), (0, 30)),
+              Stage(tuple(range(8, 16)), (30, 60)))
+    for kind in ("1f1b", "gpipe"):
+        for m in (1, 4, 16):
+            p = PipelineSpec(stages, m, 1)
+            seq = 4096
+            priced = price_schedule(
+                build_schedule(2, m, kind),
+                pipeline_tick_durations(cluster, LLAMA_32B, p, seq))
+            p2p = sum(_stage_p2p_times(cluster, LLAMA_32B, p, seq))
+            t_closed = pipeline_time(cluster, LLAMA_32B, p, seq, kind=kind)
+            assert priced.makespan + p2p == pytest.approx(t_closed,
+                                                          rel=1e-9)
+            # and the closed form still is fill * slot + p2p latency
+            micro_tokens = seq
+            slot = max(stage_micro_time(cluster, LLAMA_32B, stages[0],
+                                        micro_tokens, seq), p2p)
+            assert t_closed == pytest.approx(
+                fill_drain_count(m, 2) * slot + p2p)
+
+
+def test_nonuniform_stages_priced_below_bottleneck_closed_form():
+    """A heterogeneous stage split no longer pays bottleneck price for
+    its whole fill ramp: the priced timetable sits strictly below the
+    uniform closed form evaluated at the bottleneck, but never below the
+    bottleneck's steady-state floor."""
+    from repro.core.costmodel import (LLAMA_32B, PipelineSpec, Stage,
+                                      paper_cluster, pipeline_time,
+                                      stage_micro_time)
+    cluster = paper_cluster(16, 16)
+    # rank 0-7 H800 carry many layers, ranks 16-23 (H20) carry few:
+    # stage times differ -> non-uniform pricing path
+    stages = (Stage(tuple(range(16, 24)), (0, 14)),
+              Stage(tuple(range(0, 8)), (14, 60)))
+    m, seq = 8, 4096
+    p = PipelineSpec(stages, m, 1)
+    times = [stage_micro_time(cluster, LLAMA_32B, st, seq, seq)
+             for st in stages]
+    assert times[0] != times[1]
+    got = pipeline_time(cluster, LLAMA_32B, p, seq)
+    bottleneck = max(times)
+    closed_at_bottleneck = fill_drain_count(m, 2) * bottleneck
+    assert got < closed_at_bottleneck
+    assert got > m * bottleneck    # steady state alone costs this much

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Execute the ``python`` code blocks of markdown docs.
+
+CI runs this over ``docs/*.md`` so the documentation cannot rot: every
+fenced block marked exactly ```` ```python ```` must run (blocks within
+one file share a namespace and run in order, so later blocks may use
+names defined earlier).  Use a different info string (e.g.
+```` ```text ```` or bare fences) for illustrative snippets that are
+not meant to execute.
+
+Each file runs in its own subprocess with ``PYTHONPATH=src`` and 8
+forced host CPU devices (before any jax import), matching the runtime
+selftest harness, so doc examples may use multi-device strategies and
+the JaxExecutor.
+
+Usage::
+
+    python tools/run_doc_blocks.py docs/*.md [README.md]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+FENCE = re.compile(r"^```(\S*)\s*$")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def extract_blocks(path: str) -> list[tuple[int, str]]:
+    """(start line, source) for every ```python fenced block."""
+    blocks: list[tuple[int, str]] = []
+    lang = None
+    buf: list[str] = []
+    start = 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            m = FENCE.match(line)
+            if m and lang is None:
+                lang = m.group(1)
+                buf, start = [], lineno + 1
+            elif m:
+                if lang == "python" and buf:
+                    blocks.append((start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    if lang is not None:
+        raise SystemExit(f"{path}: unterminated code fence")
+    return blocks
+
+
+def run_file(path: str) -> bool:
+    blocks = extract_blocks(path)
+    if not blocks:
+        print(f"  {path}: no python blocks")
+        return True
+    source = "".join(
+        f"\n# --- {path}:{start} (block {i + 1}/{len(blocks)})\n{code}"
+        for i, (start, code) in enumerate(blocks))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("XLA_FLAGS",
+                   "--xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, "-c", source], cwd=REPO,
+                          env=env, capture_output=True, text=True)
+    ok = proc.returncode == 0
+    status = "ok" if ok else "FAIL"
+    print(f"  {path}: {len(blocks)} block(s) {status}")
+    if not ok:
+        sys.stderr.write(proc.stdout)
+        sys.stderr.write(proc.stderr)
+    return ok
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    failures = [p for p in argv if not run_file(p)]
+    if failures:
+        print(f"doc blocks FAILED in: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
