@@ -1,0 +1,91 @@
+"""Training-step throughput: Session.train_step on both executors.
+
+Seeds the perf trajectory for the graph-IR trainer: steps/s of the
+2-stage loss pipeline (fwd -> bwd -> grad-reduce -> AdamW) on the
+numpy simulator and — when enough host devices are forced — the jax
+shard_map backend, swept over microbatch counts and schedule kinds.
+Emits ``BENCH_train_step.json`` next to the repo root::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.bench_train_step
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+
+def _steps_per_second(sess, feeds, m, kind, warmup=1, iters=3) -> float:
+    for _ in range(warmup):
+        sess.train_step(feeds, num_microbatches=m, schedule=kind)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        sess.train_step(feeds, num_microbatches=m, schedule=kind)
+    return iters / (time.perf_counter() - t0)
+
+
+def bench(n_devices: int = 4) -> dict:
+    import jax
+
+    from repro import api
+    from repro.api.testing import loss_pipeline_program, loss_pipeline_values
+
+    prog = loss_pipeline_program(n_devices, name="pipe")
+    xv, ws, _ = loss_pipeline_values()
+    executors = {"sim": api.SimulatorExecutor()}
+    if len(jax.devices()) >= n_devices:
+        executors["jax"] = api.JaxExecutor()
+
+    out: dict = {"devices": n_devices, "cases": {}}
+    for exn, ex in executors.items():
+        for m, kind in [(1, "1f1b"), (2, "1f1b"), (4, "1f1b"),
+                        (4, "gpipe")]:
+            # step-0 loss from a FRESH session (comparable across runs
+            # and to the api:train selftest reference), then re-load to
+            # time steady-state steps
+            sess = api.Session(prog, "pipe", executor=ex)
+            sess.load(ws)
+            loss0 = sess.train_step({"X": xv}, num_microbatches=m,
+                                    schedule=kind).loss
+            sess = api.Session(prog, "pipe", executor=ex)
+            sess.load(ws)
+            sps = _steps_per_second(sess, {"X": xv}, m, kind)
+            out["cases"][f"{exn}/m{m}/{kind}"] = {
+                "steps_per_second": sps,
+                "loss_step0": loss0,
+            }
+    # plan-level accounting rides along: measured fwd fraction + priced
+    # timetable of the train plan
+    tplan = prog.compile_train("pipe")
+    sched = tplan.schedule(4)
+    priced = sched.stats(tplan.tick_durations())
+    out["fwd_fraction"] = tplan.fwd_fraction()
+    out["priced_makespan_s"] = priced.makespan
+    out["bubble_fraction"] = priced.bubble_fraction
+    return out
+
+
+def rows(report: dict | None = None):
+    report = report or bench()
+    out = []
+    for name, c in sorted(report["cases"].items()):
+        sps = c["steps_per_second"]
+        out.append((f"train_step/{name}", 1.0 / sps,
+                    f"steps_per_s={sps:.2f} loss0={c['loss_step0']:g}"))
+    out.append(("train_step/fwd_fraction", 0.0,
+                f"measured={report['fwd_fraction']:.4f}"))
+    return out
+
+
+def main() -> None:
+    report = bench()
+    for name, seconds, derived in rows(report):
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+    with open("BENCH_train_step.json", "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print("wrote BENCH_train_step.json")
+
+
+if __name__ == "__main__":
+    main()

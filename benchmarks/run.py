@@ -19,6 +19,7 @@ MODULES = [
     ("fig17_case_study", "benchmarks.bench_case_study"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("train_step", "benchmarks.bench_train_step"),
 ]
 
 

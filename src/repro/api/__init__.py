@@ -37,7 +37,8 @@ importable as shims; see README "Migrating to repro.api".
 from repro.core.annotations import (DG, DS, DUP, PARTIAL, HSPMD, replicated,
                                     spmd)
 from repro.core.comm_resolve import resolve
-from repro.core.graph import DeductionError, DeductionReport, Graph
+from repro.core.graph import (DeductionError, DeductionReport, GradError,
+                              Graph, VJP_RULES, cotangent_annot)
 from repro.core.op_semantics import MicrobatchError
 from repro.core.plan import CommPlan
 from repro.core.schedule import (PipelineSchedule, PricedSchedule,
@@ -54,7 +55,7 @@ from repro.core.topology import (NvlinkIbTopology, Topology,
 from .executors import (Executor, JaxExecutor, SimulatorExecutor,
                         get_executor)
 from .program import CompiledPlan, CompileError, CostEstimate, Program
-from .session import RunResult, Session
+from .session import RunResult, Session, TrainResult
 from .strategy import (Strategy, StrategyError, data_parallel_strategy,
                        weights_graph)
 
@@ -66,13 +67,13 @@ __all__ = [
     "DG", "DS", "DUP", "PARTIAL", "HSPMD", "replicated", "spmd",
     "CommPlan", "CompileError", "CompiledPlan", "CostEstimate",
     "DeductionError", "DeductionReport", "ExecItem", "ExecutableGraph",
-    "Executor", "Graph", "JaxExecutor", "MicrobatchError",
+    "Executor", "GradError", "Graph", "JaxExecutor", "MicrobatchError",
     "NvlinkIbTopology", "Pipeline", "PipelineSchedule", "PricedSchedule",
     "Program", "RunResult", "ScheduleError", "ScheduleStats", "Session",
     "ShardedTensor", "SimulatorExecutor", "SpecializationResult",
     "Strategy", "StrategyError", "SwitchOutcome", "SwitchReport", "Tick",
-    "Topology", "UniformTopology", "build_schedule",
-    "data_parallel_strategy", "estimate_switch", "gather", "get_executor",
-    "plan_tensor_switch", "price_schedule", "resolve", "scatter",
-    "weights_graph",
+    "Topology", "TrainResult", "UniformTopology", "VJP_RULES",
+    "build_schedule", "cotangent_annot", "data_parallel_strategy",
+    "estimate_switch", "gather", "get_executor", "plan_tensor_switch",
+    "price_schedule", "resolve", "scatter", "weights_graph",
 ]

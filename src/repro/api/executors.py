@@ -140,13 +140,16 @@ class SimulatorExecutor:
                      states: Sequence[dict[str, ShardedTensor]],
                      fetches: Sequence[str] | None = None
                      ) -> list[dict[str, ShardedTensor]]:
-        """Interpret the timetable: each forward tick runs exactly the
-        ops of its (virtual) pipeline stage for its microbatch (backward
-        ticks are schedule structure only — the graph IR is
-        forward-mode).  Interleaved schedules index ops by virtual
-        stage: chunk ``tick.stage // S`` on device ``tick.stage % S``.
-        A schedule that violates dataflow (a stage ticking before its
-        producer stage) fails on the missing input."""
+        """Interpret the timetable: each tick runs exactly the ops of
+        its (virtual) pipeline stage AND its phase for its microbatch —
+        forward ticks run the forward ops, backward ticks run the
+        autodiff backward ops anchored at that stage (gradient compute
+        plus activation-grad / grad-reduce comm; forward-only graphs
+        simply have empty bwd ticks).  Interleaved schedules index ops
+        by virtual stage: chunk ``tick.stage // S`` on device
+        ``tick.stage % S``.  A schedule that violates dataflow (a stage
+        ticking before its producer stage) fails on the missing
+        input."""
         if len(states) != schedule.num_microbatches:
             raise ScheduleError(
                 f"{len(states)} microbatch states for a "
@@ -164,26 +167,27 @@ class SimulatorExecutor:
         stage_of = assign_stages(
             graph, k, compiled.specialization.pipelines,
             virtual_stages_per_device=schedule.virtual_per_stage)
-        ops_by_stage: dict[int, list] = {}
+        ops_by_phase: dict[tuple[int, str], list] = {}
         for op in graph.ops:
             if op.kind in ("placeholder", "parameter"):
                 continue
-            ops_by_stage.setdefault(stage_of[id(op)], []).append(op)
+            phase = "bwd" if op.attrs.get("phase") == "bwd" else "fwd"
+            ops_by_phase.setdefault(
+                (stage_of[id(op)], phase), []).append(op)
         envs = [self._leaf_env(compiled, st) for st in states]
         ran = [0] * len(states)
         for tick in schedule.ticks:          # already (slot, stage) sorted
-            if tick.phase != "fwd":
-                continue
             env = envs[tick.microbatch]
-            for op in ops_by_stage.get(tick.stage, ()):
+            for op in ops_by_phase.get((tick.stage, tick.phase), ()):
                 try:
                     self._exec_op(op, env, compiled, plans)
                 except KeyError as e:
                     raise ScheduleError(
-                        f"stage {tick.stage} ran before its input "
-                        f"{e} was produced (invalid schedule)") from None
+                        f"stage {tick.stage} ({tick.phase}) ran before "
+                        f"its input {e} was produced (invalid "
+                        f"schedule)") from None
                 ran[tick.microbatch] += 1
-        n_ops = sum(len(v) for v in ops_by_stage.values())
+        n_ops = sum(len(v) for v in ops_by_phase.values())
         if any(r != n_ops for r in ran):
             raise ScheduleError(
                 f"schedule executed {ran} of {n_ops} ops per microbatch")

@@ -15,7 +15,7 @@ from dataclasses import dataclass, field
 from typing import Sequence
 
 from repro.core import op_semantics
-from repro.core.graph import DeductionReport, Graph
+from repro.core.graph import DeductionReport, GradError, Graph
 from repro.core.plan import CommPlan
 from repro.core.schedule import (PipelineSchedule, build_schedule,
                                  infer_virtual_stages, microbatch_graph,
@@ -76,6 +76,10 @@ class CompiledPlan:
     # shapes were scaled down by, and each tensor's microbatch role
     num_microbatches: int = 1
     mb_roles: dict[str, int] | None = None
+    # set on TRAIN plans (Program.compile_train): autodiff provenance —
+    # forward tensor name -> gradient tensor name, and the loss tensor
+    grad_map: dict[str, str] | None = None
+    loss_name: str | None = None
     _schedules: dict = field(default_factory=dict, repr=False)
     _n_virtual: int | None = field(default=None, repr=False)
 
@@ -121,6 +125,34 @@ class CompiledPlan:
                 self.n_stages, num_microbatches, kind,
                 virtual_stages_per_device=v)
         return cached
+
+    def tick_durations(self, flops_per_second: float = 1e12,
+                       virtual_stages_per_device: int | None = None
+                       ) -> dict[tuple[int, str], float]:
+        """MEASURED per-(virtual stage, phase) tick durations from this
+        plan's own graph: each (chunk, phase) slot is priced by the real
+        FLOPs of the ops assigned to it (autodiff backward ops fill the
+        ``bwd`` slots of a train plan; forward-only plans price bwd as
+        0).  Feed to ``schedule.stats(durations)`` /
+        ``core.schedule.price_schedule`` to re-time a timetable — the
+        measured replacement for the cost model's fwd:bwd = 1:2
+        assumption."""
+        from repro.core.costmodel import graph_tick_durations
+        v = virtual_stages_per_device or self.virtual_stages_per_device
+        return graph_tick_durations(
+            self.graph, self.strategy_index,
+            self.specialization.pipelines, v, self.shapes,
+            flops_per_second)
+
+    def fwd_fraction(self) -> float:
+        """The fwd share of this plan's compute FLOPs
+        (:func:`~repro.core.costmodel.measured_fwd_fraction`; the
+        analytic 1/3 for forward-only plans)."""
+        from repro.core.costmodel import measured_fwd_fraction
+        return measured_fwd_fraction(
+            self.graph, self.strategy_index,
+            self.specialization.pipelines,
+            self.virtual_stages_per_device, self.shapes)
 
     @property
     def comm_plans(self) -> list[CommPlan]:
@@ -201,6 +233,7 @@ class Program:
                 t.annots = []
         self.report: DeductionReport = self.graph.deduction_report()
         self._compile_cache: dict[tuple, CompiledPlan] = {}
+        self._joint_cache: dict[str, Graph] = {}
 
     @classmethod
     def from_annotated(cls, graph: Graph,
@@ -226,6 +259,7 @@ class Program:
         prog.strategies = strategies
         prog.report = report
         prog._compile_cache = {}
+        prog._joint_cache = {}
         return prog
 
     # -- lookup ------------------------------------------------------------
@@ -302,6 +336,84 @@ class Program:
         plan = self._compile_graph(micro, k, env, topology)
         plan.num_microbatches = num_microbatches
         plan.mb_roles = roles
+        self._compile_cache[key] = plan
+        return plan
+
+    def _resolve_loss(self, loss: str | None) -> str:
+        """The loss tensor's NAME (default: the single scalar sink) —
+        resolved before any cache lookup so ``loss=None`` and
+        ``loss="L"`` share one joint graph and one train-plan line."""
+        if loss is not None:
+            if loss not in self.graph.tensors:
+                raise CompileError(f"unknown loss tensor {loss!r}")
+            return loss
+        scalars = [t for t in self.graph.sinks() if tuple(t.shape) == ()]
+        if len(scalars) != 1:
+            raise CompileError(
+                f"graph has {len(scalars)} scalar sink(s); pass loss= "
+                f"to pick the tensor to differentiate")
+        return scalars[0].name
+
+    def _joint_graph(self, loss: str) -> Graph:
+        """The fwd+bwd training graph: a private copy of the deduced
+        graph extended with its reverse-mode backward pass
+        (``core.graph.Graph.backward``), memoized per loss tensor and
+        shared by every strategy (annotations are per-strategy lists)."""
+        import copy
+        cached = self._joint_cache.get(loss)
+        if cached is None:
+            joint = copy.deepcopy(self.graph)
+            try:
+                joint.backward(loss)
+            except GradError as e:
+                raise CompileError(f"cannot build the training graph: "
+                                   f"{e}") from None
+            cached = self._joint_cache[loss] = joint
+        return cached
+
+    def compile_train(self, strategy: "Strategy | str | int", *,
+                      loss: str | None = None,
+                      num_microbatches: int = 1,
+                      shape_env: dict[str, int] | None = None,
+                      topology: Topology | None = None) -> CompiledPlan:
+        """Compile the JOINT fwd+bwd plan for one training step.
+
+        The forward graph is extended with real backward ops (per-op
+        VJPs, gradient comm resolved by §4 like any CommOp), then
+        compiled through the normal specialization path — so the
+        returned plan's ExecItems carry a ``bwd`` phase, its pipelines
+        are the forward pipelines, and its timetables' ``bwd`` ticks
+        finally execute gradient compute + grad-reduce comm.  With
+        ``num_microbatches=m > 1`` the joint graph is microbatched
+        (gradients carry the Partial role: they accumulate across
+        microbatches).  ``plan.grad_map`` / ``plan.loss_name`` expose
+        the autodiff provenance; memoized like :meth:`compile`.
+        """
+        k = self.index(strategy)
+        if num_microbatches < 1:
+            raise CompileError(
+                f"num_microbatches must be >= 1 (got {num_microbatches})")
+        strat = self.strategies[k]
+        env = dict(shape_env or {})
+        topology = topology or strat.topology or _DEFAULT_TOPOLOGY
+        loss = self._resolve_loss(loss)
+        key = ("train", k, tuple(sorted(env.items())), id(topology),
+               num_microbatches, loss)
+        cached = self._compile_cache.get(key)
+        if cached is not None:
+            return cached
+        joint = self._joint_graph(loss)
+        if num_microbatches == 1:
+            plan = self._compile_graph(joint, k, env, topology)
+        else:
+            roles = microbatch_roles(joint)
+            micro = microbatch_graph(joint, num_microbatches, roles,
+                                     shape_env=env)
+            plan = self._compile_graph(micro, k, env, topology)
+            plan.num_microbatches = num_microbatches
+            plan.mb_roles = roles
+        plan.grad_map = dict(joint.grad_map)
+        plan.loss_name = joint.loss_name
         self._compile_cache[key] = plan
         return plan
 

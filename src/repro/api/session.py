@@ -30,6 +30,27 @@ from .strategy import Strategy
 
 
 @dataclass
+class TrainResult:
+    """One training step's outcome: the (global) loss, the gradient
+    shards that produced the update, optimizer metrics (grad_norm, lr),
+    and — for microbatched steps — the executed pipeline timetable."""
+
+    loss: float
+    grads: dict[str, ShardedTensor]
+    metrics: dict[str, float]
+    schedule: PipelineSchedule | None = None
+    outputs: dict[str, ShardedTensor] | None = None  # extra fetches
+
+    @property
+    def stats(self) -> "ScheduleStats | None":
+        return self.schedule.stats() if self.schedule else None
+
+    def grad_value(self, name: str) -> np.ndarray:
+        """Reconstruct a parameter's global gradient."""
+        return gather(self.grads[name])
+
+
+@dataclass
 class RunResult:
     """One step's fetched tensors, sharded per the active strategy.
 
@@ -66,7 +87,8 @@ class Session:
     def __init__(self, program: Program, strategy: "Strategy | str | int",
                  *, executor: Executor | None = None,
                  shape_env: dict[str, int] | None = None,
-                 topology: Topology | None = None, seed: int = 0):
+                 topology: Topology | None = None, seed: int = 0,
+                 optimizer=None):
         self.program = program
         self.executor: Executor = executor or SimulatorExecutor()
         self.shape_env = dict(shape_env or {})
@@ -75,6 +97,10 @@ class Session:
         self.weights: dict[str, ShardedTensor] = {}
         self.plan: CompiledPlan = program.compile(
             strategy, shape_env=self.shape_env, topology=topology)
+        # training state (train_step): AdamW config + sharded m/v/count,
+        # created lazily on the first step and resharded by switch()
+        self.optimizer = optimizer
+        self.opt_state: dict | None = None
 
     # -- state -------------------------------------------------------------
     @property
@@ -136,15 +162,7 @@ class Session:
         ``result.schedule.stats(durations)`` to price a real cluster).
         """
         feeds = dict(feeds or {})
-        # knob validation fails for every m, not just m > 1
-        if schedule not in SCHEDULES:
-            raise ScheduleError(
-                f"unknown schedule {schedule!r} (have {SCHEDULES})")
-        v = virtual_stages_per_device
-        if schedule != "interleaved" and v not in (None, 1):
-            raise ScheduleError(
-                f"virtual_stages_per_device={v} requires "
-                f"schedule='interleaved' (got {schedule!r})")
+        self._validate_schedule_kind(schedule, virtual_stages_per_device)
         if num_microbatches == 1:
             state = self._leaf_state(feeds)
             outs = self.executor.run(self.plan, state, fetches)
@@ -152,6 +170,30 @@ class Session:
         mplan = self.program.compile_micro(
             self.plan.strategy_index, num_microbatches,
             shape_env=self.shape_env, topology=self.topology)
+        per_mb, sched = self._run_pipelined(
+            mplan, feeds, fetches, schedule, virtual_stages_per_device)
+        outs = self._combine(per_mb, mplan, full_plan=self.plan)
+        return RunResult(outs, schedule=sched)
+
+    def _validate_schedule_kind(self, schedule: str, v: int | None) -> None:
+        """Knob validation up front — an unknown ``schedule=`` string
+        fails here with the valid kinds listed, for every microbatch
+        count, instead of deep inside ``build_schedule``."""
+        if schedule not in SCHEDULES:
+            raise ScheduleError(
+                f"unknown schedule {schedule!r}; valid kinds are "
+                f"{', '.join(repr(s) for s in SCHEDULES)}")
+        if schedule != "interleaved" and v not in (None, 1):
+            raise ScheduleError(
+                f"virtual_stages_per_device={v} requires "
+                f"schedule='interleaved' (got {schedule!r})")
+
+    def _run_pipelined(self, mplan: CompiledPlan, feeds: dict, fetches,
+                       schedule: str, v: int | None):
+        """Shared microbatched-execution path of run/train_step: split
+        feeds, build per-microbatch leaf states, execute the timetable
+        on the session executor.  Returns (per-microbatch fetches,
+        executed schedule)."""
         inferred = mplan.virtual_stages_per_device
         if schedule == "interleaved":
             v = inferred if v is None else v
@@ -165,11 +207,11 @@ class Session:
                     f"plan interleaves {inferred} chunks per device; "
                     f"run it with schedule='interleaved'")
             v = 1
-        sched = self.plan.schedule(num_microbatches, schedule,
-                                   virtual_stages_per_device=v)
+        sched = mplan.schedule(mplan.num_microbatches, schedule,
+                               virtual_stages_per_device=v)
         micro_feeds = self._split_feeds(feeds, mplan)
         states = []
-        for j in range(num_microbatches):
+        for j in range(mplan.num_microbatches):
             st: dict[str, ShardedTensor] = {}
             for t in mplan.graph.placeholders():
                 annot = mplan.graph.tensors[t.name].annots[
@@ -190,13 +232,86 @@ class Session:
         else:  # third-party executors: host-level microbatch loop
             per_mb = [self.executor.run(mplan, st, fetches)
                       for st in states]
-        k = self.plan.strategy_index
-        outs = combine_outputs(
+        return per_mb, sched
+
+    def _combine(self, per_mb, mplan: CompiledPlan,
+                 full_plan: CompiledPlan) -> dict[str, ShardedTensor]:
+        """Reduce per-microbatch fetches by role (Partial accumulates,
+        Split concatenates); full-batch shapes/annots come from the
+        unmicrobatched plan over the same graph."""
+        k = mplan.strategy_index
+        return combine_outputs(
             per_mb, mplan.mb_roles,
-            {name: self.plan.shapes[name] for name in per_mb[0]},
-            {name: self.program.graph.tensors[name].annots[k]
+            {name: full_plan.shapes[name] for name in per_mb[0]},
+            {name: full_plan.graph.tensors[name].annots[k]
              for name in per_mb[0]})
-        return RunResult(outs, schedule=sched)
+
+    # -- training ----------------------------------------------------------
+    def train_step(self, feeds: Mapping[str, object] | None = None, *,
+                   num_microbatches: int = 1,
+                   schedule: str = "1f1b",
+                   virtual_stages_per_device: int | None = None,
+                   loss: str | None = None,
+                   fetches: Sequence[str] = ()) -> TrainResult:
+        """One full training step on the session executor: forward ->
+        backward -> gradient reduce -> AdamW, restart-free.
+
+        The joint fwd+bwd graph (``Program.compile_train``) runs exactly
+        like ``run``: unpipelined for ``num_microbatches=1``, otherwise
+        as the explicit 1F1B / GPipe / interleaved timetable whose
+        ``bwd`` ticks execute the real backward ExecItems; per-microbatch
+        gradients carry the Partial role and accumulate bit-exactly in
+        microbatch order.  Gradients arrive sharded EXACTLY like their
+        parameters (the backward pass's grad-reduce comm: all-reduce for
+        replicated params, reduce-scatter over the DP dim for Split
+        params), so the AdamW update (``optim.adamw.sharded_apply_
+        updates``) is elementwise per shard; optimizer state mirrors the
+        weight sharding and is migrated by :meth:`switch`.
+
+        ``loss`` defaults to the graph's single scalar sink; ``fetches``
+        may name extra tensors (activations, activation grads via
+        ``plan.grad_map``) to return on ``TrainResult.outputs``.
+        """
+        from repro.optim.adamw import (AdamWConfig, init_sharded_state,
+                                       sharded_apply_updates)
+
+        feeds = dict(feeds or {})
+        self._validate_schedule_kind(schedule, virtual_stages_per_device)
+        if self.optimizer is None:
+            self.optimizer = AdamWConfig()
+        k = self.plan.strategy_index
+        tplan = self.program.compile_train(
+            k, loss=loss, num_microbatches=num_microbatches,
+            shape_env=self.shape_env, topology=self.topology)
+        params = [t.name for t in tplan.graph.parameters()]
+        for name in params:
+            if name not in self.weights:
+                raise ValueError(
+                    f"parameter {name!r} not loaded; call session.load")
+        grad_fetch = [tplan.grad_map[p] for p in params]
+        fetch_list = [tplan.loss_name] + grad_fetch + list(fetches)
+        sched = None
+        if num_microbatches == 1:
+            state = dict(self._leaf_state(dict(feeds)))
+            outs = self.executor.run(tplan, state, fetch_list)
+        else:
+            per_mb, sched = self._run_pipelined(
+                tplan, feeds, fetch_list, schedule,
+                virtual_stages_per_device)
+            full = self.program.compile_train(
+                k, loss=loss, shape_env=self.shape_env,
+                topology=self.topology)
+            outs = self._combine(per_mb, tplan, full_plan=full)
+        loss_value = float(gather(outs[tplan.loss_name]))
+        grads = {p: outs[g] for p, g in zip(params, grad_fetch)}
+        if self.opt_state is None:
+            self.opt_state = init_sharded_state(self.weights)
+        self.weights, self.opt_state, metrics = sharded_apply_updates(
+            self.weights, grads, self.opt_state, self.optimizer)
+        metrics["loss"] = loss_value
+        extra = {f: outs[f] for f in fetches}
+        return TrainResult(loss_value, grads, metrics, schedule=sched,
+                           outputs=extra)
 
     def _leaf_state(self, feeds: dict) -> dict[str, ShardedTensor]:
         state: dict[str, ShardedTensor] = {}
@@ -266,6 +381,16 @@ class Session:
         outcome = core_switch(
             self.weights, self.program.graph, src, dst, self.shape_env,
             topology, backend=backend, mesh=mesh)
+        if self.opt_state is not None:
+            # optimizer m/v mirror the weight annotations: migrate them
+            # through the same fused-BSR plan so training resumes
+            # restart-free after the switch
+            from repro.core.switching import execute_switch
+            for key in ("m", "v"):
+                self.opt_state[key] = execute_switch(
+                    self.opt_state[key], self.program.graph, src, dst,
+                    self.shape_env, topology, backend=backend, mesh=mesh,
+                    report=outcome.report)
         self.weights = outcome.weights
         self.plan = self.program.compile(dst, shape_env=self.shape_env,
                                          topology=self.topology)

@@ -51,6 +51,46 @@ def zigzag_program(n: int = 4, name: str = "zig") -> "api.Program":
     return api.Program(g, [strat])
 
 
+def loss_pipeline_program(n: int = 4, name: str = "pipe") -> "api.Program":
+    """The canonical 2-stage loss pipeline of the selftest suite:
+    ``L = sum(relu(X @ W1) @ W2)`` with stage 0 column-parallel over the
+    first half of the devices and stage 1 row-parallel over the second
+    half — scalar loss, so it trains end-to-end via
+    ``Session.train_step``."""
+    half = n // 2
+    s0, s1 = list(range(half)), list(range(half, n))
+    col = api.DS({1: half}) if half > 1 else api.DS({})
+    row = api.DS({0: half}) if half > 1 else api.DS({})
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W1", (16, 12))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"),
+               name="H")
+    g.comm(h, name="H2")
+    g.parameter("W2", (12, 6))
+    y = g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+    g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+    strat = api.Strategy(name, {
+        "X": api.spmd(s0, api.DS({api.DUP: half})),
+        "W1": api.spmd(s0, col),
+        "H2": api.spmd(s1, row),
+        "W2": api.spmd(s1, api.DS({api.DUP: half})),
+    })
+    return api.Program(g, [strat])
+
+
+def loss_pipeline_values(seed: int = 11):
+    """Integer-valued leaves for :func:`loss_pipeline_program` (exact
+    under float32 sums -> bitwise-comparable pipelined gradients) plus
+    the expected ``Y`` and loss."""
+    rng = np.random.default_rng(seed)
+    xv = rng.integers(-4, 5, (16, 16)).astype(np.float32)
+    w1v = rng.integers(-4, 5, (16, 12)).astype(np.float32)
+    w2v = rng.integers(-4, 5, (12, 6)).astype(np.float32)
+    want_y = np.maximum(xv @ w1v, 0) @ w2v
+    return xv, {"W1": w1v, "W2": w2v}, want_y
+
+
 def zigzag_values(seed: int = 11):
     """Integer-valued leaves (exact under float32 summation) and the
     expected full-batch ``Y`` for :func:`zigzag_program`."""
@@ -64,4 +104,5 @@ def zigzag_values(seed: int = 11):
     return xv, ws, want_y
 
 
-__all__ = ["zigzag_program", "zigzag_values"]
+__all__ = ["loss_pipeline_program", "loss_pipeline_values",
+           "zigzag_program", "zigzag_values"]

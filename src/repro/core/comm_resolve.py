@@ -17,6 +17,13 @@ Groups are produced by a *fine-slice* builder that is exact for arbitrary
 geometry (including bottom-tier splits along the HDim axis and non-uniform
 ``hsplits``); the paper's operator names are preserved in ``CommStep.kind``
 for classification, statistics and cost modeling.
+
+Gradient synchronization rides these same rules (reverse-mode autodiff,
+``core.graph.backward``): parameter grads are deduced PARTIAL wherever
+the forward consumed a replica, and the grad-reduce CommOp's
+(Partial -> param annotation) pair resolves here to AR for replicated
+params or RS over the DP dim for Split-sharded params — no
+training-specific communication logic exists anywhere.
 """
 
 from __future__ import annotations

@@ -157,16 +157,88 @@ def fill_drain_count(n_micro: int, n_stages: int) -> int:
 # matmul operands -> the canonical 1:2 ratio); the priced makespan of a
 # uniform pipeline is invariant to this split (the critical path holds
 # fill-count fwd ticks AND fill-count bwd ticks), so the uniform closed
-# form stays exact for any fraction.
+# form stays exact for any fraction.  This is the analytic FALLBACK:
+# compiled plans over a differentiated graph measure the real ratio
+# from per-phase op FLOPs (``measured_fwd_fraction`` /
+# ``CompiledPlan.tick_durations``) and pass it via ``fwd_fraction=``.
 FWD_TIME_FRACTION = 1.0 / 3.0
 
 
 def stage_tick_times(cluster: ClusterSpec, model: ModelSpec, st: Stage,
-                     micro_tokens: int, seq_len: int) -> tuple[float, float]:
+                     micro_tokens: int, seq_len: int,
+                     fwd_fraction: float | None = None
+                     ) -> tuple[float, float]:
     """(fwd, bwd) seconds of one microbatch through one stage — the
-    non-uniform tick durations the schedule engine prices."""
+    non-uniform tick durations the schedule engine prices.
+    ``fwd_fraction`` overrides the analytic 1:2 split (e.g. the ratio
+    measured from a differentiated graph's real FLOPs)."""
+    f = FWD_TIME_FRACTION if fwd_fraction is None else fwd_fraction
     t = stage_micro_time(cluster, model, st, micro_tokens, seq_len)
-    return t * FWD_TIME_FRACTION, t * (1.0 - FWD_TIME_FRACTION)
+    return t * f, t * (1.0 - f)
+
+
+# ---------------------------------------------------------------------------
+# measured tick durations from a differentiated graph (autodiff-aware)
+# ---------------------------------------------------------------------------
+
+def graph_phase_flops(graph, strategy: int, pipelines,
+                      virtual_stages_per_device: int,
+                      shapes) -> dict[tuple[int, str], float]:
+    """``(virtual stage, phase) -> FLOPs`` of one step, counted from the
+    graph's REAL ops: forward ops land in their assigned (virtual)
+    stage's ``fwd`` slot, autodiff backward ops in their anchor stage's
+    ``bwd`` slot.  This is what replaces the hardcoded fwd:bwd = 1:2
+    split once the graph IR carries a backward pass, and it prices each
+    interleave CHUNK by its own op count (chunks no longer share their
+    physical stage's pricing)."""
+    from . import op_semantics
+    from .schedule import assign_stages
+
+    stage_of = assign_stages(graph, strategy, pipelines,
+                             virtual_stages_per_device)
+    n_stages = max((p.n_stages for p in pipelines), default=1)
+    out: dict[tuple[int, str], float] = {
+        (s, ph): 0.0
+        for s in range(n_stages * virtual_stages_per_device)
+        for ph in ("fwd", "bwd")}
+    for op in graph.ops:
+        if op.kind in ("placeholder", "parameter", "comm"):
+            continue
+        phase = "bwd" if op.attrs.get("phase") == "bwd" else "fwd"
+        fl = op_semantics.flops(
+            op.kind, [shapes[t.name] for t in op.inputs],
+            shapes[op.outputs[0].name], op.attrs)
+        out[(stage_of[id(op)], phase)] += fl
+    return out
+
+
+def graph_tick_durations(graph, strategy: int, pipelines,
+                         virtual_stages_per_device: int, shapes,
+                         flops_per_second: float = 1e12
+                         ) -> dict[tuple[int, str], float]:
+    """Per-(virtual stage, phase) tick seconds MEASURED from the graph's
+    own op FLOPs, for ``core.schedule.price_schedule``.  Every slot is
+    present (zero-cost phases price as 0.0 — e.g. ``bwd`` ticks of a
+    forward-only graph)."""
+    return {k: v / flops_per_second
+            for k, v in graph_phase_flops(
+                graph, strategy, pipelines,
+                virtual_stages_per_device, shapes).items()}
+
+
+def measured_fwd_fraction(graph, strategy: int, pipelines,
+                          virtual_stages_per_device: int, shapes
+                          ) -> float:
+    """The fwd share of one step's compute FLOPs, measured from a
+    differentiated graph (falls back to :data:`FWD_TIME_FRACTION` for
+    forward-only graphs, whose bwd FLOPs are zero)."""
+    fl = graph_phase_flops(graph, strategy, pipelines,
+                           virtual_stages_per_device, shapes)
+    fwd = sum(v for (s, ph), v in fl.items() if ph == "fwd")
+    bwd = sum(v for (s, ph), v in fl.items() if ph == "bwd")
+    if bwd <= 0.0:
+        return FWD_TIME_FRACTION
+    return fwd / (fwd + bwd)
 
 
 def _stage_p2p_times(cluster: ClusterSpec, model: ModelSpec,
@@ -182,37 +254,63 @@ def _stage_p2p_times(cluster: ClusterSpec, model: ModelSpec,
 
 
 def pipeline_tick_durations(cluster: ClusterSpec, model: ModelSpec,
-                            p: PipelineSpec, seq_len: int
+                            p: PipelineSpec, seq_len: int, *,
+                            virtual_stages_per_device: int = 1,
+                            fwd_fraction: float | None = None
                             ) -> dict[tuple[int, str], float]:
-    """``(stage, phase) -> seconds`` for ``core.schedule.price_schedule``.
+    """``(virtual stage, phase) -> seconds`` for
+    ``core.schedule.price_schedule``.
 
     Per stage, the steady-state slot must cover both the stage's compute
     and the slowest stage-boundary transfer it has to hide (the schedule
     overlaps sends with the next microbatch's compute), so each tick is
-    ``max(stage time, slowest boundary) * phase fraction``."""
+    ``max(stage time, slowest boundary) * phase fraction``.
+
+    With ``virtual_stages_per_device = v > 1`` (Megatron interleaving)
+    each physical stage's layers split evenly across its ``v`` chunks,
+    so chunk ticks cost ``1/v`` of the stage's compute — per-CHUNK
+    pricing instead of chunks inheriting their stage's full cost, which
+    is what gives interleaved schedules their genuine ~1/v fill/drain
+    advantage when priced.  ``fwd_fraction`` overrides the analytic
+    fwd:bwd = 1:2 split (pass a ratio measured from the differentiated
+    graph, :func:`measured_fwd_fraction`)."""
+    f = FWD_TIME_FRACTION if fwd_fraction is None else fwd_fraction
+    v = virtual_stages_per_device
     micro_tokens = p.micro_bs * seq_len
     p2p_max = max(_stage_p2p_times(cluster, model, p, seq_len), default=0.0)
     out: dict[tuple[int, str], float] = {}
+    n_stages = len(p.stages)
     for s, st in enumerate(p.stages):
         slot = max(stage_micro_time(cluster, model, st, micro_tokens,
-                                    seq_len), p2p_max)
-        out[(s, "fwd")] = slot * FWD_TIME_FRACTION
-        out[(s, "bwd")] = slot * (1.0 - FWD_TIME_FRACTION)
+                                    seq_len) / v, p2p_max)
+        for c in range(v):
+            out[(c * n_stages + s, "fwd")] = slot * f
+            out[(c * n_stages + s, "bwd")] = slot * (1.0 - f)
     return out
 
 
 def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
-                  seq_len: int, kind: str = "1f1b") -> float:
+                  seq_len: int, kind: str = "1f1b", *,
+                  virtual_stages_per_device: int = 1,
+                  fwd_fraction: float | None = None) -> float:
     """Seconds for one step of one pipeline, priced from the executable
-    timetable: ``core.schedule.build_schedule`` emits the 1F1B/GPipe
-    tick table the executors would run and ``price_schedule`` re-times
-    it under the per-(stage, phase) durations above, so heterogeneous
-    stage splits are scored by the schedule they'd actually execute
-    (a non-bottleneck fill ramp no longer pays bottleneck price).  The
-    fill ramp additionally pays each boundary's latency once, when the
-    first microbatch traverses the pipeline.
+    timetable: ``core.schedule.build_schedule`` emits the 1F1B/GPipe/
+    interleaved tick table the executors would run and
+    ``price_schedule`` re-times it under the per-(virtual stage, phase)
+    durations above, so heterogeneous stage splits are scored by the
+    schedule they'd actually execute (a non-bottleneck fill ramp no
+    longer pays bottleneck price).  The fill ramp additionally pays each
+    boundary's latency once, when the first microbatch traverses the
+    pipeline.
 
-    Uniform stage costs keep the closed-form fast path
+    ``kind="interleaved"`` with ``virtual_stages_per_device = v > 1``
+    prices Megatron's virtual-stage timetable under PER-CHUNK tick
+    durations (each chunk carries ``1/v`` of its stage's layers), so
+    interleaving shows its real ~``1/v`` bubble advantage; at ``v=1``
+    it degenerates to the 1F1B table.  ``fwd_fraction`` overrides the
+    analytic 1:2 fwd:bwd split with a measured ratio.
+
+    Uniform stage costs (v=1) keep the closed-form fast path
     ``fill_drain_count(m, S) * slot + sum(p2p)`` — asserted equal to the
     priced timetable, so the two definitions cannot drift.
     """
@@ -221,6 +319,15 @@ def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
     if kind not in ("1f1b", "gpipe", "interleaved"):
         raise ValueError(f"unknown schedule kind {kind!r} "
                          f"(have: 1f1b, gpipe, interleaved)")
+    v = virtual_stages_per_device
+    if v < 1:
+        raise ValueError(f"virtual_stages_per_device must be >= 1 "
+                         f"(got {v})")
+    if v > 1 and kind != "interleaved":
+        raise ValueError(
+            f"virtual_stages_per_device={v} requires kind='interleaved' "
+            f"(got {kind!r})")
+    f = FWD_TIME_FRACTION if fwd_fraction is None else fwd_fraction
     micro_tokens = p.micro_bs * seq_len
     times = [stage_micro_time(cluster, model, st, micro_tokens, seq_len)
              for st in p.stages]
@@ -228,18 +335,22 @@ def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
     p2p_max = max(p2p_each, default=0.0)
 
     def t_priced() -> float:
-        # analytic PipelineSpecs carry no chunk layout, so "interleaved"
-        # prices as its v=1 degenerate (the 1F1B table)
-        durations: dict[tuple[int, str], float] = {}
-        for s, t in enumerate(times):
-            slot = max(t, p2p_max)
-            durations[(s, "fwd")] = slot * FWD_TIME_FRACTION
-            durations[(s, "bwd")] = slot * (1.0 - FWD_TIME_FRACTION)
+        durations = pipeline_tick_durations(
+            cluster, model, p, seq_len, virtual_stages_per_device=v,
+            fwd_fraction=f)
+        if kind == "interleaved" and v > 1:
+            sched = build_schedule(len(p.stages), p.n_micro,
+                                   "interleaved",
+                                   virtual_stages_per_device=v)
+            # each of the first microbatch's v ring traversals pays the
+            # boundary latencies once
+            return price_schedule(sched, durations).makespan \
+                + v * sum(p2p_each)
         sched = build_schedule(len(p.stages), p.n_micro,
                                "gpipe" if kind == "gpipe" else "1f1b")
         return price_schedule(sched, durations).makespan + sum(p2p_each)
 
-    if all(t == times[0] for t in times[1:]):       # uniform fast path
+    if v == 1 and all(t == times[0] for t in times[1:]):  # uniform fast path
         slot = max([times[0]] + p2p_each)
         t_uniform = fill_drain_count(p.n_micro, len(p.stages)) * slot \
             + sum(p2p_each)

@@ -29,6 +29,10 @@ class DeductionError(ValueError):
     pass
 
 
+class GradError(ValueError):
+    """Reverse-mode autodiff cannot differentiate this graph."""
+
+
 @dataclass
 class Tensor:
     name: str
@@ -267,6 +271,150 @@ def _deduce_reshape(ins: list[HSPMD], shapes, new_shape) -> HSPMD:
     return HSPMD(a.dgs, dss, hdim=hdim, hsplits=a.hsplits)
 
 
+def _deduce_linear_grad(ins: list[HSPMD], shapes) -> HSPMD:
+    """Elementwise deduction for ``x_grad``-style kernels (``relu_grad``,
+    ``gelu_grad``, ``mul``'s backward uses): the FIRST operand (the
+    upstream cotangent) may be Partial — the kernel is linear in it, so
+    ``(sum_i dy_i) * mask == sum_i (dy_i * mask)`` and the Partial
+    degree passes through.  Split dims must still agree."""
+    u = unify_inputs(ins)
+    dy = u[0]
+    for a in u[1:]:
+        for ds_dy, ds_a in zip(dy.dss, a.dss):
+            if ds_a.has_partial:
+                raise DeductionError(
+                    "mask operand of a grad kernel is Partial; insert "
+                    "CommOp to reduce it first")
+            if ({d: n for d, n in ds_a.entries if d >= 0}
+                    != {d: n for d, n in ds_dy.entries if d >= 0}):
+                raise DeductionError(
+                    "grad kernel operands have mismatched split dims; "
+                    "insert CommOp")
+    return dy
+
+
+def _deduce_bcast(ins: list[HSPMD], shapes, dim: int) -> HSPMD:
+    """Inverse of ``sum``'s dim bookkeeping: the new dim is inserted at
+    ``dim`` (unsharded); split dims at or after it shift up.  Duplicate
+    and Partial pass through (broadcast is linear)."""
+    (a,) = ins
+    dss = []
+    for ds in a.dss:
+        entries = []
+        for d, n in ds.entries:
+            if d >= dim:
+                entries.append((d + 1, n))
+            else:
+                entries.append((d, n))
+        dss.append(DS(entries))
+    hdim = a.hdim + 1 if a.hdim >= dim else a.hdim
+    return HSPMD(a.dgs, dss, hdim=hdim,
+                 hsplits=a.hsplits if hdim == a.hdim else None)
+
+
+def _deduce_embedding(ins: list[HSPMD], shapes) -> HSPMD:
+    """Embedding lookup ``out[b..., :] = table[ids[b...], :]``.
+
+    Indices are global, so the vocab dim (table dim 0) must not be
+    split (insert a CommOp to replicate first); a split on the feature
+    dim (table dim 1) becomes the output's last dim; ids splits pass
+    through; the lookup is linear in the table, so a Partial table
+    yields a Partial output, while Partial *indices* are meaningless.
+    """
+    ta, ia = unify_inputs(ins)
+    ids_ndim = len(shapes[1])
+    dss = []
+    for ts, is_ in zip(ta.dss, ia.dss):
+        if ts.get(0) > 1:
+            raise DeductionError(
+                "embedding table split along the vocab dim; insert a "
+                "CommOp to replicate (indices are global)")
+        if is_.get(PARTIAL) > 1:
+            raise DeductionError("embedding indices cannot be Partial")
+        entries: list[tuple[int, int]] = []
+        for d in range(ids_ndim):
+            n = is_.get(d)
+            if n > 1:
+                entries.append((d, n))
+        n_split = ts.get(1)
+        if n_split > 1:
+            entries.append((ids_ndim, n_split))
+        partial = ts.get(PARTIAL)
+        if partial > 1:
+            entries.append((PARTIAL, partial))
+        n_dev = is_.num_devices
+        used = 1
+        for _, n in entries:
+            used *= n
+        if n_dev % used != 0:
+            raise DeductionError(
+                f"inconsistent embedding sharding: {used} does not "
+                f"divide {n_dev}")
+        if n_dev // used > 1:
+            entries.append((DUP, n_dev // used))
+        dss.append(DS(entries))
+    if ia.hdim == PARTIAL:
+        raise DeductionError("embedding indices cannot be Partial")
+    if ia.hdim >= 0:
+        if ta.hdim not in (DUP, PARTIAL):
+            raise DeductionError(
+                "both embedding operands top-split; insert CommOp")
+        hdim = ia.hdim
+    elif ta.hdim == 1:
+        hdim = ids_ndim
+    elif ta.hdim == PARTIAL:
+        hdim = PARTIAL
+    elif ta.hdim == 0:
+        raise DeductionError(
+            "embedding table top-split along the vocab dim; insert CommOp")
+    else:
+        hdim = DUP
+    return HSPMD(ia.dgs, dss, hdim=hdim,
+                 hsplits=ia.hsplits if hdim == ia.hdim else None)
+
+
+def _deduce_embed_grad(ins: list[HSPMD], shapes) -> HSPMD:
+    """VJP of embedding wrt the table: scatter-add of ``dy`` rows at
+    ``ids``.  Batch splits collapse to Partial (each device scatters its
+    slice of rows into a full-vocab buffer); a split feature dim maps to
+    out dim 1; ids splits must match dy's batch splits."""
+    da, ia = unify_inputs(ins)
+    dy_ndim = len(shapes[0])
+    dss = []
+    for ds_, is_ in zip(da.dss, ia.dss):
+        partial = ds_.get(PARTIAL)
+        entries: list[tuple[int, int]] = []
+        for d, n in ds_.entries:
+            if d == dy_ndim - 1:
+                entries.append((1, n))
+            elif d >= 0:
+                if is_.get(d) != n:
+                    raise DeductionError(
+                        f"embed_grad: dy batch dim {d} split {n} does not "
+                        f"match ids split {is_.get(d)}")
+                partial *= n
+        if partial > 1:
+            entries.append((PARTIAL, partial))
+        n_dev = ds_.num_devices
+        used = 1
+        for _, n in entries:
+            used *= n
+        if n_dev % used != 0:
+            raise DeductionError(
+                f"inconsistent embed_grad sharding: {used} does not "
+                f"divide {n_dev}")
+        if n_dev // used > 1:
+            entries.append((DUP, n_dev // used))
+        dss.append(DS(entries))
+    if da.hdim == dy_ndim - 1:
+        hdim = 1
+    elif da.hdim >= 0:
+        hdim = PARTIAL
+    else:
+        hdim = da.hdim
+    return HSPMD(da.dgs, dss, hdim=hdim)
+
+
 DEDUCTION_RULES = {
     "gelu": lambda ins, shapes, attrs: ins[0],
     "relu": lambda ins, shapes, attrs: ins[0],
@@ -279,7 +427,65 @@ DEDUCTION_RULES = {
         ins, shapes, attrs["perm"]),
     "reshape": lambda ins, shapes, attrs: _deduce_reshape(
         ins, shapes, attrs["new_shape"]),
+    "embedding": lambda ins, shapes, attrs: _deduce_embedding(ins, shapes),
+    # backward-only kernels (reverse-mode autodiff, Graph.backward)
+    "relu_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "gelu_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "mul_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "bcast": lambda ins, shapes, attrs: _deduce_bcast(
+        ins, shapes, attrs["dim"]),
+    "embed_grad": lambda ins, shapes, attrs: _deduce_embed_grad(ins, shapes),
 }
+
+# ops whose outputs carry EXPLICIT annotations (not deduced): graph
+# leaves, CommOps, and the autodiff gradient seed
+LEAF_KINDS = ("placeholder", "parameter", "comm", "ones")
+
+
+# ---------------------------------------------------------------------------
+# cotangent annotations (reverse-mode autodiff, paper §5.2 one level down)
+# ---------------------------------------------------------------------------
+
+def cotangent_annot(a: HSPMD) -> HSPMD:
+    """The canonical annotation of a tensor's gradient: Split stays
+    Split (the grad of a shard is the shard of the grad), while
+    Duplicate and Partial SWAP — a replicated tensor consumed by many
+    devices accumulates per-device grad summands (Partial), and a
+    Partial tensor's summands each receive the full grad (Duplicate).
+    This is the transpose of the linear map the placement realizes."""
+    def swap(d: int) -> int:
+        return PARTIAL if d == DUP else (DUP if d == PARTIAL else d)
+
+    dss = [DS([(swap(d), n) for d, n in ds.entries]) for ds in a.dss]
+    return HSPMD(a.dgs, dss, hdim=swap(a.hdim), hsplits=a.hsplits)
+
+
+def departialize(a: HSPMD) -> HSPMD:
+    """``a`` with every Partial entry turned into Duplicate (the
+    annotation after an in-group all-reduce): the full-value carrier of
+    the same placement geometry."""
+    dss = []
+    for ds in a.dss:
+        m: dict[int, int] = {}
+        order: list[int] = []
+        for d, n in ds.entries:
+            d = DUP if d == PARTIAL else d
+            if d in m:
+                m[d] *= n
+            else:
+                m[d] = n
+                order.append(d)
+        dss.append(DS([(d, m[d]) for d in order]))
+    hdim = DUP if a.hdim == PARTIAL else a.hdim
+    return HSPMD(a.dgs, dss, hdim=hdim, hsplits=a.hsplits)
+
+
+def annots_equal(a: HSPMD, b: HSPMD) -> bool:
+    """Exact placement equality (entry order matters: it fixes the
+    device -> shard coordinate decomposition)."""
+    return (a.same_dg_union(b)
+            and all(x.entries == y.entries for x, y in zip(a.dss, b.dss))
+            and a.hdim == b.hdim and a.hsplits == b.hsplits)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +499,11 @@ class Graph:
         self.ops: list[Op] = []
         self.tensors: dict[str, Tensor] = {}
         self._n = 0
+        # reverse-mode autodiff provenance (Graph.backward): forward
+        # tensor name -> its gradient tensor's name, and the loss the
+        # backward extension was seeded from
+        self.grad_map: dict[str, str] = {}
+        self.loss_name: str | None = None
 
     # -- leaves -------------------------------------------------------------
     def _add_tensor(self, name, shape, annots=None, producer=None) -> Tensor:
@@ -369,13 +580,226 @@ class Graph:
         return self._compute("reshape", [x], tuple(new_shape), name,
                              new_shape=tuple(new_shape))
 
+    def embedding(self, table, ids, name=None):
+        """Row lookup ``out[b..., :] = table[ids[b...], :]`` (the token
+        embedding of a language model; indices are global vocab ids)."""
+        if len(table.shape) != 2:
+            raise ValueError("embedding expects a 2D (vocab, dim) table")
+        out_shape = tuple(ids.shape) + (table.shape[-1],)
+        return self._compute("embedding", [table, ids], out_shape, name)
+
+    # -- reverse-mode autodiff ----------------------------------------------
+    def _bwd(self, kind: str, ins: list[Tensor], out_shape, anchor: str,
+             grad_of: str | None = None, name: str | None = None,
+             **attrs) -> Tensor:
+        """Append one backward op and deduce its annotations immediately
+        (the forward graph is already annotated, and backward ops are
+        built in dataflow order, so every input is annotated).  Every
+        backward op carries ``phase="bwd"`` plus ``fwd_anchor`` — the
+        forward tensor whose (virtual) pipeline stage it executes in —
+        and grad-producing ops additionally carry ``grad_of``."""
+        t = self._compute(kind, list(ins), out_shape, name, **attrs)
+        op = t.producer
+        op.attrs["phase"] = "bwd"
+        op.attrs["fwd_anchor"] = anchor
+        if grad_of is not None:
+            op.attrs["grad_of"] = grad_of
+        rule = DEDUCTION_RULES[kind]
+        shapes = [i.shape for i in ins]
+        n = max(len(i.annots) for i in ins)
+        t.annots = [rule([i.annots[k] for i in ins], shapes, op.attrs)
+                    for k in range(n)]
+        return t
+
+    def _bwd_comm(self, x: Tensor, annots, anchor: str,
+                  grad_of: str | None = None,
+                  name: str | None = None) -> Tensor:
+        out = self.comm(x, list(annots), name=name)
+        op = out.producer
+        op.attrs["phase"] = "bwd"
+        op.attrs["fwd_anchor"] = anchor
+        if grad_of is not None:
+            op.attrs["grad_of"] = grad_of
+        return out
+
+    def _canonicalize_grad(self, gt: Tensor, x: Tensor, anchor: str,
+                           grad_of: str) -> Tensor:
+        """Reshard gradient contribution ``gt`` onto ``x``'s cotangent
+        placement (:func:`cotangent_annot`) so backward deduction always
+        sees the same sharding patterns the forward graph used.
+
+        Where the cotangent keeps a Partial that communication cannot
+        create (comm resolution never *introduces* summands), the
+        departialized full-value carrier is used instead; a Partial
+        contribution that must cross device groups is all-reduced in
+        its own group first (Partial tensors cannot move across unions,
+        paper §4.3)."""
+        n = len(x.annots)
+        wants = [cotangent_annot(a) for a in x.annots]
+        targets: list[HSPMD] = []
+        need = False
+        for k in range(n):
+            have, want = gt.annots[k], wants[k]
+            if annots_equal(have, want) or \
+                    annots_equal(have, departialize(want)):
+                targets.append(have)
+                continue
+            targets.append(departialize(want) if want.has_partial
+                           else want)
+            need = True
+        if not need:
+            return gt
+        hops: list[HSPMD] = []
+        hop_needed = False
+        for k in range(n):
+            have, tgt = gt.annots[k], targets[k]
+            if have.has_partial and not annots_equal(have, tgt) and (
+                    have.hsize != tgt.hsize
+                    or not have.same_dg_union(tgt)):
+                hops.append(departialize(have))
+                hop_needed = True
+            else:
+                hops.append(have)
+        if hop_needed:
+            gt = self._bwd_comm(gt, hops, anchor)
+        return self._bwd_comm(gt, targets, anchor, grad_of=grad_of)
+
+    def backward(self, loss: "Tensor | str | None" = None,
+                 wrt: "Sequence[Tensor | str] | None" = None
+                 ) -> dict[str, str]:
+        """Extend this *deduced* forward graph in place with its
+        reverse-mode backward pass (the joint fwd+bwd training graph).
+
+        A per-op-kind VJP registry (:data:`VJP_RULES`) emits each
+        operator's backward as ordinary graph ops, so the existing
+        deduction rules propagate DS annotations through the backward
+        half unchanged; gradient contributions are resharded onto each
+        tensor's cotangent placement (Split stays Split, Duplicate and
+        Partial swap), accumulated across consumers, and finally every
+        parameter gradient is communicated onto the parameter's OWN
+        annotation (Partial -> Duplicate becomes an all-reduce, Partial
+        -> Split a reduce-scatter over the DP dim — resolved by §4 comm
+        resolution like any other CommOp).
+
+        ``loss`` defaults to the graph's single scalar sink; ``wrt``
+        to all parameters.  Returns (and stores as ``self.grad_map``)
+        the ``forward tensor name -> gradient tensor name`` provenance.
+        """
+        if self.grad_map:
+            raise GradError("graph already extended with a backward pass")
+        if loss is None:
+            scalars = [t for t in self.sinks() if tuple(t.shape) == ()]
+            if len(scalars) != 1:
+                raise GradError(
+                    f"graph has {len(scalars)} scalar sink(s); pass "
+                    f"loss= to pick the tensor to differentiate")
+            loss_t = scalars[0]
+        else:
+            name = loss.name if isinstance(loss, Tensor) else loss
+            if name not in self.tensors:
+                raise GradError(f"unknown loss tensor {name!r}")
+            loss_t = self.tensors[name]
+        if tuple(loss_t.shape) != ():
+            raise GradError(
+                f"loss {loss_t.name!r} must be scalar; got shape "
+                f"{loss_t.shape} (reduce it with sum)")
+        if not loss_t.annots:
+            raise GradError(
+                "run deduce() before backward(): autodiff propagates "
+                "the deduced annotations through the backward ops")
+        params = [p if isinstance(p, Tensor) else self.tensors[p]
+                  for p in (wrt if wrt is not None else self.parameters())]
+
+        fwd_ops = list(self.ops)
+        contributions: dict[str, list[Tensor]] = {}
+        grad_map: dict[str, str] = {}
+
+        # seed: dL/dL == 1 on the loss's cotangent placement (a Partial
+        # loss — per-device summands — receives a Duplicate seed)
+        seed = self._add_tensor(f"d/{loss_t.name}", (),
+                                [cotangent_annot(a) for a in loss_t.annots])
+        seed_op = Op("ones", [], [seed],
+                     {"phase": "bwd", "grad_of": loss_t.name,
+                      "fwd_anchor": loss_t.name})
+        self.ops.append(seed_op)
+        seed.producer = seed_op
+        contributions[loss_t.name] = [seed]
+
+        def combine(t: Tensor) -> "Tensor | None":
+            contribs = contributions.get(t.name)
+            if not contribs:
+                return None
+            n = len(t.annots)
+            if len(contribs) > 1 and any(
+                    not annots_equal(c.annots[k], contribs[0].annots[k])
+                    for c in contribs[1:] for k in range(n)):
+                # mixed Partial/Duplicate carriers: converge on the
+                # full-value carrier of the cotangent placement
+                wants = [cotangent_annot(a) for a in t.annots]
+                targets = [
+                    contribs[0].annots[k]
+                    if all(annots_equal(c.annots[k], contribs[0].annots[k])
+                           for c in contribs[1:])
+                    else departialize(wants[k])
+                    for k in range(n)]
+                contribs = [
+                    c if all(annots_equal(c.annots[k], targets[k])
+                             for k in range(n))
+                    else self._bwd_comm(c, targets, anchor=t.name)
+                    for c in contribs]
+            acc = contribs[0]
+            for c in contribs[1:]:
+                acc = self._bwd("add", [acc, c], tuple(t.shape),
+                                anchor=t.name, grad_of=t.name)
+            grad_map[t.name] = acc.name
+            return acc
+
+        for op in reversed(fwd_ops):
+            if op.kind in ("placeholder", "parameter"):
+                continue
+            out = op.outputs[0]
+            dy = combine(out)
+            if dy is None:
+                continue  # not on the loss path
+            rule = VJP_RULES.get(op.kind)
+            if rule is None:
+                raise GradError(f"no VJP rule for op kind {op.kind!r}")
+            for x, gt in zip(op.inputs, rule(self, op, dy)):
+                if gt is None:
+                    continue
+                gt = self._canonicalize_grad(gt, x, anchor=out.name,
+                                             grad_of=x.name)
+                contributions.setdefault(x.name, []).append(gt)
+
+        # parameter gradients: reduce onto the parameter's own placement
+        # so the optimizer applies elementwise sharded updates — a
+        # Duplicate(DP) param's Partial grad all-reduces, a Split param's
+        # Partial grad reduce-scatters (comm_resolve picks the operator)
+        for p in params:
+            gt = combine(p)
+            if gt is None:
+                raise GradError(
+                    f"parameter {p.name!r} is not on the loss path")
+            if any(not annots_equal(gt.annots[k], p.annots[k])
+                   for k in range(len(p.annots))):
+                gt = self._bwd_comm(gt, list(p.annots), anchor=p.name,
+                                    grad_of=p.name, name=f"d/{p.name}")
+            grad_map[p.name] = gt.name
+        for op in fwd_ops:         # input grads are useful fetches too
+            if op.kind == "placeholder" and \
+                    op.outputs[0].name not in grad_map:
+                combine(op.outputs[0])
+        self.grad_map = grad_map
+        self.loss_name = loss_t.name
+        return grad_map
+
     # -- deduction (§5.2) -----------------------------------------------------
     def deduce(self) -> "Graph":
         """Fill in annotations for every tensor, per strategy index."""
         n_strat = max((len(t.annots) for t in self.tensors.values()
                        if t.annots), default=1)
         for op in self.ops:
-            if op.kind in ("placeholder", "parameter", "comm"):
+            if op.kind in LEAF_KINDS:
                 for t in op.outputs:
                     if not t.annots:
                         raise DeductionError(f"leaf/comm {t.name} needs annots")
@@ -442,6 +866,124 @@ class Graph:
             n_tensors=len(self.tensors),
             devices=tuple(devices),
         )
+
+
+# ---------------------------------------------------------------------------
+# per-op-kind VJP registry (reverse-mode autodiff)
+# ---------------------------------------------------------------------------
+#
+# Each rule takes ``(g, op, dy)`` — the graph, the forward op, and the
+# (already combined) gradient of the op's output — and returns one
+# gradient contribution per op input (``None`` for non-differentiable
+# inputs such as integer indices).  Rules emit ordinary graph ops via
+# ``g._bwd`` so DS/HDim deduction runs through them unchanged; the
+# caller (``Graph.backward``) reshards every contribution onto the
+# input's cotangent placement.
+
+def _vjp_elementwise_act(kind_grad: str):
+    def vjp(g: "Graph", op: Op, dy: Tensor) -> list:
+        (x,) = op.inputs
+        anchor = op.outputs[0].name
+        return [g._bwd(kind_grad, [dy, x], tuple(x.shape), anchor,
+                       grad_of=x.name)]
+    return vjp
+
+
+def _vjp_scale(g: "Graph", op: Op, dy: Tensor) -> list:
+    (x,) = op.inputs
+    return [g._bwd("scale", [dy], tuple(x.shape), op.outputs[0].name,
+                   grad_of=x.name, factor=op.attrs.get("factor", 1.0))]
+
+
+def _vjp_add(g: "Graph", op: Op, dy: Tensor) -> list:
+    return [dy, dy]
+
+
+def _vjp_mul(g: "Graph", op: Op, dy: Tensor) -> list:
+    a, b = op.inputs
+    anchor = op.outputs[0].name
+    da = g._bwd("mul_grad", [dy, b], tuple(a.shape), anchor, grad_of=a.name)
+    db = g._bwd("mul_grad", [dy, a], tuple(b.shape), anchor, grad_of=b.name)
+    return [da, db]
+
+
+def _vjp_dot(g: "Graph", op: Op, dy: Tensor) -> list:
+    x, w = op.inputs
+    anchor = op.outputs[0].name
+    wt = g._bwd("transpose", [w], (w.shape[1], w.shape[0]), anchor,
+                perm=(1, 0))
+    dx = g._bwd("dot", [dy, wt], tuple(x.shape), anchor, grad_of=x.name)
+    if len(x.shape) == 2:
+        x2, dy2 = x, dy
+    else:
+        import math
+        lead = x.shape[:-1]
+        if not all(isinstance(s, int) for s in lead):
+            raise GradError(
+                f"dot VJP over >2D operand {x.name!r} needs concrete "
+                f"leading dims (bind symbolic shapes first)")
+        m = math.prod(lead)
+        x2 = g._bwd("reshape", [x], (m, x.shape[-1]), anchor,
+                    new_shape=(m, x.shape[-1]))
+        dy2 = g._bwd("reshape", [dy], (m, w.shape[1]), anchor,
+                     new_shape=(m, w.shape[1]))
+    xt = g._bwd("transpose", [x2], (x2.shape[1], x2.shape[0]), anchor,
+                perm=(1, 0))
+    dw = g._bwd("dot", [xt, dy2], tuple(w.shape), anchor, grad_of=w.name)
+    return [dx, dw]
+
+
+def _vjp_sum(g: "Graph", op: Op, dy: Tensor) -> list:
+    (x,) = op.inputs
+    dim = op.attrs["dim"]
+    return [g._bwd("bcast", [dy], tuple(x.shape), op.outputs[0].name,
+                   grad_of=x.name, dim=dim, size=x.shape[dim])]
+
+
+def _vjp_transpose(g: "Graph", op: Op, dy: Tensor) -> list:
+    (x,) = op.inputs
+    perm = op.attrs["perm"]
+    inv = [0] * len(perm)
+    for new, old in enumerate(perm):
+        inv[old] = new
+    return [g._bwd("transpose", [dy], tuple(x.shape), op.outputs[0].name,
+                   grad_of=x.name, perm=tuple(inv))]
+
+
+def _vjp_reshape(g: "Graph", op: Op, dy: Tensor) -> list:
+    (x,) = op.inputs
+    return [g._bwd("reshape", [dy], tuple(x.shape), op.outputs[0].name,
+                   grad_of=x.name, new_shape=tuple(x.shape))]
+
+
+def _vjp_embedding(g: "Graph", op: Op, dy: Tensor) -> list:
+    table, ids = op.inputs
+    dt = g._bwd("embed_grad", [dy, ids], tuple(table.shape),
+                op.outputs[0].name, grad_of=table.name,
+                vocab=table.shape[0])
+    return [dt, None]  # integer indices carry no gradient
+
+
+def _vjp_comm(g: "Graph", op: Op, dy: Tensor) -> list:
+    # the redistribution map is linear; its transpose is realized by the
+    # caller's cotangent resharding of this contribution (an AR/RS/AG/BSR
+    # mirroring the forward CommOp), so the rule itself is the identity
+    return [dy]
+
+
+VJP_RULES = {
+    "gelu": _vjp_elementwise_act("gelu_grad"),
+    "relu": _vjp_elementwise_act("relu_grad"),
+    "scale": _vjp_scale,
+    "add": _vjp_add,
+    "mul": _vjp_mul,
+    "dot": _vjp_dot,
+    "sum": _vjp_sum,
+    "transpose": _vjp_transpose,
+    "reshape": _vjp_reshape,
+    "embedding": _vjp_embedding,
+    "comm": _vjp_comm,
+}
 
 
 @dataclass(frozen=True)

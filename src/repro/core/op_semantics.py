@@ -24,8 +24,16 @@ def result_dtype(kind: str, in_dtypes):
     otherwise promote int inputs to float64 while jax stays in float32,
     silently diverging the executors)."""
     import numpy as np
+    if kind == "ones":             # the autodiff gradient seed: no inputs
+        return np.dtype(np.float32)
+    if kind in ("embedding", "embed_grad"):
+        # integer indices must not promote the value dtype (numpy's
+        # f32+int32 -> f64 would diverge from jax); the value operand is
+        # the first input in both kinds
+        return np.dtype(in_dtypes[0])
     dt = np.result_type(*in_dtypes)
-    if kind in ("gelu", "scale") and not np.issubdtype(dt, np.floating):
+    if kind in ("gelu", "gelu_grad", "scale") and \
+            not np.issubdtype(dt, np.floating):
         dt = np.dtype(np.float32)  # not result_type: int32+f32 -> f64
     return dt
 
@@ -55,6 +63,37 @@ def local_apply(kind: str, xp, ins, attrs, out_shape):
         return xp.transpose(ins[0], attrs["perm"])
     if kind == "reshape":
         return xp.reshape(ins[0], out_shape)
+    if kind == "embedding":
+        table, ids = ins
+        return xp.take(table, ids, axis=0)
+    # -- backward-only kernels (reverse-mode autodiff) ----------------------
+    if kind == "ones":            # gradient seed dL/dL == 1
+        return xp.ones(out_shape)
+    if kind == "relu_grad":
+        dy, x = ins
+        return dy * (x > 0)
+    if kind == "gelu_grad":
+        dy, x = ins
+        u = GELU_C * (x + 0.044715 * x * x * x)
+        t = xp.tanh(u)
+        du = GELU_C * (1.0 + 3 * 0.044715 * x * x)
+        return dy * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du)
+    if kind == "mul_grad":        # dy * other; linear in dy (Partial-safe)
+        return ins[0] * ins[1]
+    if kind == "bcast":           # VJP of sum: replicate along the new dim
+        return xp.broadcast_to(xp.expand_dims(ins[0], attrs["dim"]),
+                               out_shape)
+    if kind == "embed_grad":      # VJP of embedding: scatter-add rows
+        dy, ids = ins
+        d = dy.shape[-1]
+        dyf = xp.reshape(dy, (-1, d))
+        idf = xp.reshape(ids, (-1,))
+        buf = xp.zeros(out_shape, dy.dtype)
+        if hasattr(buf, "at"):    # jax.numpy functional index update
+            return buf.at[idf].add(dyf)
+        import numpy as _np
+        _np.add.at(buf, idf, dyf)
+        return buf
     raise NotImplementedError(f"no local semantics for op kind {kind!r}")
 
 
@@ -84,6 +123,20 @@ MB_PARTIAL = -2   # mirrors annotations.PARTIAL
 
 class MicrobatchError(ValueError):
     """The graph cannot be split along the batch dim at this op."""
+
+
+def cotangent_role(role: int) -> int:
+    """The microbatch role of a tensor's GRADIENT: a per-microbatch
+    slice's grad is a per-microbatch slice; a microbatch-invariant
+    tensor (parameters) accumulates per-microbatch grad summands
+    (Partial); a Partial tensor (the loss) receives an invariant seed.
+    The same Duplicate <-> Partial duality as annotation cotangents,
+    one tier up."""
+    if role == MB_DUP:
+        return MB_PARTIAL
+    if role == MB_PARTIAL:
+        return MB_DUP
+    return role
 
 
 def microbatch_role(kind: str, in_roles, attrs, in_ndims) -> int:
@@ -160,6 +213,36 @@ def microbatch_role(kind: str, in_roles, attrs, in_ndims) -> int:
     if kind == "reshape":
         (r,) = in_roles
         return r                  # mapped by the caller (needs shapes)
+    if kind == "embedding":
+        rt, ri = in_roles
+        if rt == MB_DUP and ri == MB_DUP:
+            return MB_DUP
+        if rt == MB_DUP and ri >= 0:
+            return ri             # per-microbatch token slice
+        raise MicrobatchError(
+            f"embedding operand microbatch roles ({rt}, {ri}) are "
+            f"unsupported")
+    if kind == "ones":
+        return MB_DUP             # the gradient seed is batch-invariant
+    if kind in ("relu_grad", "gelu_grad", "mul_grad"):
+        dy, x = in_roles
+        if dy == x:
+            return dy
+        if dy == MB_PARTIAL and x == MB_DUP:
+            return MB_PARTIAL     # linear in dy
+        raise MicrobatchError(
+            f"{kind} operands have incompatible microbatch roles "
+            f"({dy} vs {x})")
+    if kind == "bcast":
+        (r,) = in_roles
+        if r < 0:
+            return r
+        return r + 1 if r >= attrs["dim"] else r
+    if kind == "embed_grad":
+        dy, _ = in_roles
+        if dy >= 0:
+            return MB_PARTIAL     # scatter-add over the batch slice
+        return dy
     raise NotImplementedError(f"no microbatch rule for op kind {kind!r}")
 
 
@@ -175,6 +258,11 @@ def flops(kind: str, in_shapes, out_shape, attrs) -> int:
         return math.prod(in_shapes[0])
     if kind in ("gelu",):
         return 8 * numel
-    if kind in ("relu", "scale", "add", "mul"):
+    if kind in ("gelu_grad",):
+        return 14 * numel         # tanh + polynomial derivative terms
+    if kind in ("relu", "scale", "add", "mul", "mul_grad", "relu_grad"):
         return numel
-    return 0  # transpose / reshape are data movement
+    if kind == "embed_grad":
+        return math.prod(in_shapes[0])  # one add per dy element
+    # transpose / reshape / bcast / embedding / ones are data movement
+    return 0

@@ -540,6 +540,15 @@ def microbatch_roles(graph: Graph, batch_dim: int = 0) -> dict[str, int]:
         if op.kind == "parameter":
             roles[out.name] = MB_DUP
             continue
+        grad_of = op.attrs.get("grad_of")
+        if grad_of is not None:
+            # gradient duality: a tensor's grad relates to the batch
+            # split exactly as the tensor does, with Duplicate <->
+            # Partial swapped (parameters accumulate grad summands
+            # across microbatches; the Partial loss seeds an invariant
+            # gradient) — op_semantics.cotangent_role
+            roles[out.name] = op_semantics.cotangent_role(roles[grad_of])
+            continue
         if op.kind == "comm":
             roles[out.name] = roles[op.inputs[0].name]
             continue
@@ -606,6 +615,8 @@ def microbatch_graph(graph: Graph, num_microbatches: int,
     for op in micro.ops:
         if op.kind == "reshape" and roles[op.outputs[0].name] >= 0:
             op.attrs["new_shape"] = tuple(op.outputs[0].shape)
+        if op.kind == "bcast":     # sum's VJP: re-aim at the scaled dim
+            op.attrs["size"] = op.outputs[0].shape[op.attrs["dim"]]
     return micro
 
 
@@ -628,6 +639,14 @@ def _stage_walk(graph: Graph, strategy: int, pipelines: list[Pipeline]
     in chunk 0 — they are state, not scheduled work — and do not
     advance the walk.
 
+    Backward ops (autodiff; ``op.attrs["phase"] == "bwd"``) do not
+    advance the walk either — their dataflow traverses the ring in
+    REVERSE, which would otherwise read as spurious wrap-arounds.  Each
+    backward op instead inherits the (stage, chunk) of its forward
+    anchor (``op.attrs["fwd_anchor"]``, the forward tensor whose VJP
+    produced it): a stage's bwd tick runs exactly the backward of the
+    ops its fwd tick ran.
+
     Returns ``(phys, chunk, n_stages, n_chunks)`` with ``phys`` /
     ``chunk`` keyed by ``id(op)``.
     """
@@ -643,6 +662,8 @@ def _stage_walk(graph: Graph, strategy: int, pipelines: list[Pipeline]
     cur_stage = 0
     cur_chunk = 0
     for op in graph.ops:
+        if op.attrs.get("phase") == "bwd":
+            continue               # anchored below, after the fwd walk
         stages = [dev_stage.get(d, 0)
                   for t in op.inputs + op.outputs
                   for d in t.annots[strategy].devices]
@@ -655,6 +676,17 @@ def _stage_walk(graph: Graph, strategy: int, pipelines: list[Pipeline]
             cur_chunk += 1
         cur_stage = s
         chunk[id(op)] = cur_chunk
+    for op in graph.ops:
+        if op.attrs.get("phase") != "bwd":
+            continue
+        anchor = op.attrs.get("fwd_anchor")
+        aop = graph.tensors[anchor].producer if anchor else None
+        if aop is not None and id(aop) in phys:
+            phys[id(op)] = phys[id(aop)]
+            chunk[id(op)] = chunk[id(aop)]
+        else:
+            phys[id(op)] = 0
+            chunk[id(op)] = 0
     return phys, chunk, n_stages, cur_chunk + 1
 
 

@@ -40,6 +40,7 @@ class ExecItem:
     name: str
     role: str = "compute"       # compute | comm
     detail: str = ""
+    phase: str = "fwd"          # fwd | bwd (autodiff backward extension)
 
 
 @dataclass
@@ -49,6 +50,11 @@ class ExecutableGraph:
 
     def kinds(self) -> list[str]:
         return [i.kind for i in self.items]
+
+    def phase_items(self, phase: str) -> list[ExecItem]:
+        """This device's items for one schedule phase — what a fwd/bwd
+        tick of the pipeline timetable executes."""
+        return [i for i in self.items if i.phase == phase]
 
 
 def resolve_comm_ops(graph: Graph, strategy: int = 0,
@@ -97,6 +103,7 @@ def specialize(graph: Graph, device: int, strategy: int = 0,
         annots = [t.annots[strategy] for t in op.inputs + op.outputs]
         if not any(device in a.devices for a in annots):
             continue  # non-local operator removal
+        phase = "bwd" if op.attrs.get("phase") == "bwd" else "fwd"
         if op.kind == "comm":
             rc = resolved[id(op)]
             for stage in rc.plan.stages:
@@ -107,14 +114,15 @@ def specialize(graph: Graph, device: int, strategy: int = 0,
                                 and device in stage.annot_after.devices):
                         eg.items.append(ExecItem(
                             step.kind, f"comm{op.attrs['id']}", "comm",
-                            f"{len(mine)} group(s)"))
+                            f"{len(mine)} group(s)", phase))
         else:
             # compute ops run only where their OUTPUT lives
             out_annots = [t.annots[strategy] for t in op.outputs]
             if op.outputs and not _device_in_annots(device, *out_annots):
                 continue
             eg.items.append(ExecItem(op.kind, op.outputs[0].name
-                                     if op.outputs else op.kind))
+                                     if op.outputs else op.kind,
+                                     phase=phase))
     return eg
 
 
@@ -218,6 +226,11 @@ def construct_pipelines(graph: Graph, strategy: int = 0,
                                           shape_env)
     for rc in resolved_comms:
         op = rc.op
+        # backward CommOps (activation-grad sends, parameter grad
+        # reduces) mirror the forward dataflow in REVERSE — the pipeline
+        # structure is defined by the forward half alone
+        if op.attrs.get("phase") == "bwd":
+            continue
         if scheduled_only:
             # one-shot CommOps feed parameters; scheduled ones feed
             # activations/gradients (have a compute producer upstream)

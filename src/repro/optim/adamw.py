@@ -70,3 +70,102 @@ def apply_updates(params, grads, opt_state, cfg: AdamWConfig):
     new_params = jax.tree.map(upd, params, m, v)
     return new_params, {"m": m, "v": v, "count": count}, \
         {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# sharded AdamW over ShardedTensors (repro.api Session.train_step)
+# ---------------------------------------------------------------------------
+#
+# The graph-IR training step produces gradients as per-device
+# ShardedTensors whose annotations MATCH the parameters' (backward's
+# grad-reduce comm guarantees it: Partial grads are all-reduced /
+# reduce-scattered onto the parameter placement).  The update is
+# therefore elementwise per shard — replicas stay bitwise in sync
+# because every device applies identical numpy arithmetic to identical
+# inputs, which is also what makes the sim and jax executors'
+# train_steps bit-comparable.  The math mirrors ``apply_updates`` above
+# (same clip, warmup, bias correction and decoupled weight decay), so a
+# single-device session matches jax.grad + apply_updates to float
+# tolerance.
+
+def init_sharded_state(params):
+    """Optimizer state mirroring a ``{name: ShardedTensor}`` weight dict
+    (fp32 m/v shards under the SAME annotations — ZeRO-3 storage when
+    the params are sharded, ZeRO-1 when only the states are)."""
+    import numpy as np
+
+    from repro.core.simulator import ShardedTensor
+
+    def zeros_like(st):
+        return ShardedTensor(
+            st.shape, st.annot,
+            {d: np.zeros(a.shape, np.float32)
+             for d, a in st.parts.items()})
+
+    return {"m": {n: zeros_like(st) for n, st in params.items()},
+            "v": {n: zeros_like(st) for n, st in params.items()},
+            "count": 0}
+
+
+def sharded_grad_norm(grads) -> float:
+    """Global gradient norm over ``{name: ShardedTensor}`` — computed on
+    the reconstructed global values (replicas counted once), fp32
+    accumulation like :func:`apply_updates`."""
+    import numpy as np
+
+    from repro.core.simulator import gather
+
+    acc = np.float32(0.0)
+    for st in grads.values():
+        g = np.asarray(gather(st), np.float32)
+        acc = acc + np.sum(np.square(g), dtype=np.float32)
+    return float(np.sqrt(acc))
+
+
+def sharded_apply_updates(params, grads, opt_state, cfg: AdamWConfig):
+    """AdamW over sharded weights: returns ``(new_params, new_state,
+    metrics)`` with the same structure; deterministic numpy, identical
+    for both executors given identical gradient shards."""
+    import numpy as np
+
+    from repro.core.simulator import ShardedTensor
+
+    if set(params) != set(grads):
+        raise ValueError(
+            f"gradient names {sorted(grads)} do not match parameters "
+            f"{sorted(params)}")
+    count = opt_state["count"] + 1
+    gnorm = np.float32(sharded_grad_norm(grads))
+    scale = np.minimum(np.float32(1.0),
+                       np.float32(cfg.grad_clip) / (gnorm + np.float32(1e-9)))
+    c = np.float32(count)
+    bc1 = np.float32(1) - np.float32(cfg.b1) ** c
+    bc2 = np.float32(1) - np.float32(cfg.b2) ** c
+    warm = min(float(count) / max(cfg.warmup_steps, 1), 1.0)
+    lr = np.float32(cfg.lr * warm)
+
+    new_params: dict[str, object] = {}
+    new_m: dict[str, object] = {}
+    new_v: dict[str, object] = {}
+    for name, p in params.items():
+        g_st, m_st, v_st = grads[name], opt_state["m"][name], \
+            opt_state["v"][name]
+        pp, mm, vv = {}, {}, {}
+        for dev, arr in p.parts.items():
+            g = np.asarray(g_st.parts[dev], np.float32) * scale
+            m_ = np.float32(cfg.b1) * m_st.parts[dev] \
+                + np.float32(1 - cfg.b1) * g
+            v_ = np.float32(cfg.b2) * v_st.parts[dev] \
+                + np.float32(1 - cfg.b2) * g * g
+            step = (m_ / bc1) / (np.sqrt(v_ / bc2) + np.float32(cfg.eps))
+            step = step + np.float32(cfg.weight_decay) * \
+                arr.astype(np.float32)
+            pp[dev] = (arr.astype(np.float32) - lr * step).astype(
+                arr.dtype)
+            mm[dev] = m_
+            vv[dev] = v_
+        new_params[name] = ShardedTensor(p.shape, p.annot, pp)
+        new_m[name] = ShardedTensor(p.shape, p.annot, mm)
+        new_v[name] = ShardedTensor(p.shape, p.annot, vv)
+    metrics = {"grad_norm": float(gnorm), "lr": float(lr)}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, metrics

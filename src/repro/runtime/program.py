@@ -24,6 +24,15 @@ The per-device programs are exactly the ExecItem lists progressive
 specialization produces (``core.specialize.specialize``); the
 SimulatorExecutor interprets the same items with numpy, which is what the
 differential tests compare against.
+
+Joint fwd+bwd TRAINING graphs (``Program.compile_train``) lower through
+the very same path: backward ops are ordinary graph ops (autodiff VJP
+kernels share ``local_apply`` with the simulator), activation-grad and
+grad-reduce CommOps are resolved plans like any other, and the scanned
+microbatch axis carries the per-microbatch gradient summands — so one
+shard_map program realizes the whole fwd → bwd → grad-reduce step that
+the SimulatorExecutor executes as explicit fwd/bwd timetable ticks
+(bit-exact parity checked by the ``api:train/*`` selftest cases).
 """
 
 from __future__ import annotations

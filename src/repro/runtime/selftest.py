@@ -439,6 +439,89 @@ def run_all(max_devices: int = 8) -> dict:
                     "bubble_fraction": sched.stats().bubble_fraction}
         record(f"api:pipeline/interleaved{n}", interleaved_case)
 
+    # 7c. end-to-end sharded TRAINING steps: Session.train_step compiles
+    #     the joint fwd+bwd plan (real backward ExecItems; bwd ticks of
+    #     the timetable execute gradient compute + grad-reduce comm) and
+    #     applies sharded AdamW — losses, gradient shards and updated
+    #     weight shards bit-exact sim vs jax and bit-identical across
+    #     m in {1,2,4} x {1f1b, gpipe} (integer-valued leaves)
+    for n, mesh in meshes.items():
+        def train_case(n=n, mesh=mesh):
+            from repro import api
+            from repro.api.testing import (loss_pipeline_program,
+                                           loss_pipeline_values)
+
+            prog = loss_pipeline_program(n, name=f"pipe{n}")
+            xv, ws, want_y = loss_pipeline_values(seed=11)
+            want_loss = float(want_y.sum())
+
+            runs = {}
+            for m, kind in [(1, "1f1b"), (2, "1f1b"), (4, "1f1b"),
+                            (4, "gpipe")]:
+                for ex in (api.SimulatorExecutor(), api.JaxExecutor(mesh)):
+                    sess = api.Session(prog, f"pipe{n}", executor=ex)
+                    sess.load(ws)
+                    r = sess.train_step({"X": xv}, num_microbatches=m,
+                                        schedule=kind)
+                    assert r.loss == want_loss, (ex.name, m, kind, r.loss)
+                    runs[(ex.name, m, kind)] = (
+                        r, {w: sess.weights[w] for w in ws})
+            base, base_w = runs[("sim", 1, "1f1b")]
+            for (exn, m, kind), (r, w) in runs.items():
+                for name in ws:
+                    a, b = base.grads[name], r.grads[name]
+                    for dev in a.parts:
+                        np.testing.assert_array_equal(
+                            b.parts[dev], a.parts[dev],
+                            err_msg=f"grad {name} dev {dev}: "
+                                    f"{exn}/m={m}/{kind} differs")
+                    aw, bw = base_w[name], w[name]
+                    for dev in aw.parts:
+                        np.testing.assert_array_equal(
+                            bw.parts[dev], aw.parts[dev],
+                            err_msg=f"weight {name} dev {dev}: "
+                                    f"{exn}/m={m}/{kind} differs")
+            # the bwd ticks really ran backward items on both phases
+            tplan = prog.compile_train(f"pipe{n}")
+            phases = {i.phase for d in tplan.devices
+                      for i in tplan.exec_items(d)}
+            assert phases == {"fwd", "bwd"}, phases
+            return {"loss": want_loss,
+                    "grad_norm": base.metrics["grad_norm"]}
+        record(f"api:train/{n}", train_case)
+
+    # 7d. interleaved virtual-stage TRAINING on the zigzag (v=2) plan:
+    #     backward ops anchor to their forward chunk's virtual stage, so
+    #     the interleaved timetable's bwd ticks drain chunk 1 before
+    #     chunk 0 — bit-exact sim vs jax and across m
+    for n, mesh in meshes.items():
+        def train_interleaved_case(n=n, mesh=mesh):
+            from repro import api
+            from repro.api.testing import zigzag_program, zigzag_values
+
+            prog = zigzag_program(n, name=f"zig{n}")
+            xv, ws, want_y = zigzag_values(seed=13)
+            runs = {}
+            for m in (1, 2, 4):
+                for ex in (api.SimulatorExecutor(), api.JaxExecutor(mesh)):
+                    sess = api.Session(prog, f"zig{n}", executor=ex)
+                    sess.load(ws)
+                    r = sess.train_step({"X": xv}, num_microbatches=m,
+                                        schedule="interleaved")
+                    assert r.loss == float(want_y.sum()), (ex.name, m)
+                    runs[(ex.name, m)] = r
+            base = runs[("sim", 1)]
+            for (exn, m), r in runs.items():
+                for name in ws:
+                    a, b = base.grads[name], r.grads[name]
+                    for dev in a.parts:
+                        np.testing.assert_array_equal(
+                            b.parts[dev], a.parts[dev],
+                            err_msg=f"grad {name} dev {dev}: {exn}/m={m} "
+                                    f"differs (interleaved train)")
+            return {"loss": base.loss}
+        record(f"api:train/interleaved{n}", train_interleaved_case)
+
     # 8. axis_index_groups subgroup reduces: a SplitAR plan lowers its
     #    cross-subgroup reduce groups onto grouped collectives (the kind
     #    sweep above re-proves bit-exactness on both reduction paths)

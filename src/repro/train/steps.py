@@ -8,6 +8,11 @@ scan, fp32 grad accumulation, AdamW update.
 ``build_prefill_step`` / ``build_decode_step``: the serving pair — prefill
 lowers a full forward over the context; decode consumes ONE token with the
 KV/SSM/window cache as carried state.
+
+``build_graph_train_step``: the graph-IR trainer — wraps
+``repro.api.Session.train_step`` (joint fwd+bwd plan with real backward
+ExecItems, grad-reduce comm, sharded AdamW) so launchers drive the HSPMD
+pipeline and the jitted model trainer through one interface.
 """
 
 from __future__ import annotations
@@ -65,6 +70,28 @@ def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
         return new_params, new_opt, {"loss": loss, **om}
 
     return train_step
+
+
+def build_graph_train_step(session, *, num_microbatches: int = 1,
+                           schedule: str = "1f1b",
+                           virtual_stages_per_device: int | None = None,
+                           loss: str | None = None):
+    """Graph-IR training step over a ``repro.api.Session`` — the HSPMD
+    counterpart of :func:`build_train_step`.
+
+    Returns ``step(feeds) -> TrainResult`` running the session's joint
+    fwd+bwd plan (real backward ExecItems on the pipeline timetable's
+    bwd ticks, grad-reduce comm, sharded AdamW) on whichever executor
+    the session holds — the launcher-facing wrapper around
+    ``Session.train_step`` so launch scripts treat both trainers
+    uniformly."""
+    def step(feeds):
+        return session.train_step(
+            feeds, num_microbatches=num_microbatches, schedule=schedule,
+            virtual_stages_per_device=virtual_stages_per_device,
+            loss=loss)
+
+    return step
 
 
 def build_switch_step(graph, src_strategy: int, dst_strategy: int, *,

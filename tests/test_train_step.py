@@ -1,0 +1,334 @@
+"""End-to-end sharded training steps (Session.train_step).
+
+The joint fwd+bwd plan must: be bit-identical across microbatch counts
+and schedule kinds (integer leaves), match jax.grad + the jax AdamW on
+the single-device graph to float tolerance, expose backward ExecItems /
+measured tick durations, survive a restart-free strategy switch with its
+optimizer state, and fail loudly on unknown schedule strings.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.testing import (loss_pipeline_program, loss_pipeline_values,
+                               zigzag_program, zigzag_values)
+from repro.core.annotations import DS, DUP, spmd
+from repro.optim.adamw import (AdamWConfig, init_sharded_state,
+                               sharded_apply_updates)
+
+
+def _fresh(prog, name, ws, **kw):
+    sess = api.Session(prog, name, **kw)
+    sess.load(ws)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# bitwise invariance across schedules and microbatch counts
+# ---------------------------------------------------------------------------
+
+def test_train_step_bit_identical_across_m_and_kind():
+    prog = loss_pipeline_program(4)
+    xv, ws, want_y = loss_pipeline_values()
+    runs = {}
+    for m, kind in [(1, "1f1b"), (2, "1f1b"), (4, "1f1b"), (4, "gpipe"),
+                    (2, "interleaved"), (4, "interleaved")]:
+        sess = _fresh(prog, "pipe", ws)
+        r = sess.train_step({"X": xv}, num_microbatches=m, schedule=kind)
+        runs[(m, kind)] = (r, {n: sess.weight_value(n) for n in ws})
+    base, base_w = runs[(1, "1f1b")]
+    assert base.loss == float(want_y.sum())
+    for key, (r, w) in runs.items():
+        assert r.loss == base.loss, key
+        assert r.metrics == base.metrics, key
+        for n in ws:
+            np.testing.assert_array_equal(r.grad_value(n),
+                                          base.grad_value(n),
+                                          err_msg=f"{key} grad {n}")
+            np.testing.assert_array_equal(w[n], base_w[n],
+                                          err_msg=f"{key} weight {n}")
+
+
+def test_train_step_interleaved_zigzag_matches_flat_m1():
+    prog = zigzag_program(4)
+    xv, ws, want_y = zigzag_values(seed=13)
+    base = _fresh(prog, "zig", ws).train_step(
+        {"X": xv}, num_microbatches=1)
+    for m in (2, 4):
+        r = _fresh(prog, "zig", ws).train_step(
+            {"X": xv}, num_microbatches=m, schedule="interleaved")
+        assert r.loss == base.loss
+        for n in ws:
+            np.testing.assert_array_equal(r.grad_value(n),
+                                          base.grad_value(n))
+
+
+def test_train_step_pipelined_schedule_surfaced():
+    prog = loss_pipeline_program(4)
+    xv, ws, _ = loss_pipeline_values()
+    r = _fresh(prog, "pipe", ws).train_step({"X": xv}, num_microbatches=4)
+    assert r.schedule is not None and r.schedule.kind == "1f1b"
+    assert r.stats.n_ticks == 2 * 2 * 4   # 2 stages x 4 microbatches
+
+
+# ---------------------------------------------------------------------------
+# numerics: jax.grad + jax AdamW reference on the single-device graph
+# ---------------------------------------------------------------------------
+
+def test_train_matches_jax_reference_over_steps():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.optim.adamw import apply_updates, init_opt_state
+
+    g = api.Graph()
+    one = [spmd([0], DS({}))]
+    g.placeholder("X", (8, 6))
+    g.parameter("W1", (6, 5))
+    g.parameter("W2", (5, 3))
+    h = g.gelu(g.dot(g.tensors["X"], g.tensors["W1"]), name="H")
+    y = g.dot(h, g.tensors["W2"], name="Y")
+    g.sum(g.sum(y, 1), 0, name="L")
+    strat = api.Strategy("one", {"X": one[0], "W1": one[0], "W2": one[0]})
+    prog = api.Program(g, [strat])
+
+    rng = np.random.default_rng(7)
+    xv = rng.normal(size=(8, 6)).astype(np.float32)
+    w1 = rng.normal(size=(6, 5)).astype(np.float32)
+    w2 = rng.normal(size=(5, 3)).astype(np.float32)
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=2, weight_decay=0.1)
+
+    sess = _fresh(prog, "one", {"W1": w1, "W2": w2}, optimizer=cfg)
+
+    def loss_fn(params):
+        hh = jax.nn.gelu(xv @ params["W1"], approximate=True)
+        return jnp.sum(hh @ params["W2"])
+
+    params = {"W1": jnp.asarray(w1), "W2": jnp.asarray(w2)}
+    opt = init_opt_state(params)
+    for step in range(3):
+        r = sess.train_step({"X": xv})
+        (lv, _), grads = jax.value_and_grad(
+            lambda p: (loss_fn(p), 0.0), has_aux=True)(params)
+        params, opt, om = apply_updates(params, grads, opt, cfg)
+        assert np.allclose(r.loss, float(lv), rtol=1e-5, atol=1e-5), step
+        assert np.allclose(r.metrics["grad_norm"], float(om["grad_norm"]),
+                           rtol=1e-4), step
+        assert np.allclose(r.metrics["lr"], float(om["lr"]), rtol=1e-6)
+        for n in ("W1", "W2"):
+            np.testing.assert_allclose(sess.weight_value(n), params[n],
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"step {step} {n}")
+
+
+def test_train_step_loss_decreases():
+    """The pipelined sharded trainer actually LEARNS a regression task."""
+    prog = loss_pipeline_program(4)
+    _, ws, _ = loss_pipeline_values()
+    sess = _fresh(prog, "pipe", ws,
+                  optimizer=AdamWConfig(lr=3e-3, warmup_steps=1,
+                                        weight_decay=0.0))
+    rng = np.random.default_rng(0)
+    xv = rng.normal(size=(16, 16)).astype(np.float32)
+    losses = [sess.train_step({"X": xv}, num_microbatches=2).loss
+              for _ in range(25)]
+    # loss L = sum(relu(X@W1)@W2) is unbounded below; AdamW must drive
+    # it monotonically-ish down
+    assert losses[-1] < losses[0] - 1.0, losses[::6]
+    assert all(np.isfinite(losses))
+
+
+# ---------------------------------------------------------------------------
+# optimizer state: sharded AdamW + restart-free switch
+# ---------------------------------------------------------------------------
+
+def test_sharded_adamw_state_mirrors_weight_sharding():
+    prog = loss_pipeline_program(4)
+    xv, ws, _ = loss_pipeline_values()
+    sess = _fresh(prog, "pipe", ws)
+    sess.train_step({"X": xv})
+    assert sess.opt_state["count"] == 1
+    for n, st in sess.weights.items():
+        m_st = sess.opt_state["m"][n]
+        assert set(m_st.parts) == set(st.parts)
+        for dev, arr in m_st.parts.items():
+            assert arr.shape == st.parts[dev].shape
+            assert arr.dtype == np.float32
+
+
+def test_sharded_adamw_rejects_mismatched_grads():
+    prog = loss_pipeline_program(4)
+    _, ws, _ = loss_pipeline_values()
+    sess = _fresh(prog, "pipe", ws)
+    state = init_sharded_state(sess.weights)
+    with pytest.raises(ValueError, match="do not match"):
+        sharded_apply_updates(sess.weights, {"W1": sess.weights["W1"]},
+                              state, AdamWConfig())
+
+
+def test_switch_migrates_optimizer_state():
+    """Training -> switch -> training continues from EXACTLY the same
+    optimizer state (restart-free, paper §6)."""
+    shapes = {"W1": (16, 12), "W2": (12, 6)}
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W1", shapes["W1"])
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"), name="H")
+    g.parameter("W2", shapes["W2"])
+    y = g.dot(h, g.tensors["W2"], name="Y")
+    g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+    s_a = api.Strategy("a", {
+        "X": spmd([0, 1], DS({0: 2})), "W1": spmd([0, 1], DS({DUP: 2})),
+        "W2": spmd([0, 1], DS({DUP: 2}))})
+    s_b = api.Strategy("b", {   # Megatron MLP: col-parallel then row
+        "X": spmd([0, 1], DS({DUP: 2})), "W1": spmd([0, 1], DS({1: 2})),
+        "W2": spmd([0, 1], DS({0: 2}))})
+    prog = api.Program(g, [s_a, s_b])
+    rng = np.random.default_rng(3)
+    xv = rng.normal(size=(16, 16)).astype(np.float32)
+    ws = {n: rng.normal(size=s).astype(np.float32)
+          for n, s in shapes.items()}
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=1, weight_decay=0.0)
+
+    ref = _fresh(prog, "a", ws, optimizer=cfg)
+    switched = _fresh(prog, "a", ws, optimizer=cfg)
+    for step in range(4):
+        r0 = ref.train_step({"X": xv})
+        r1 = switched.train_step({"X": xv})
+        assert np.allclose(r0.loss, r1.loss, rtol=1e-5), step
+        if step == 1:
+            switched.switch("b")
+            assert {d for st in switched.opt_state["m"].values()
+                    for d in st.parts}  # state moved with the weights
+    for n in shapes:
+        np.testing.assert_allclose(switched.weight_value(n),
+                                   ref.weight_value(n), atol=1e-4)
+        from repro.core.simulator import gather
+        np.testing.assert_allclose(gather(switched.opt_state["m"][n]),
+                                   gather(ref.opt_state["m"][n]),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# schedule-kind validation (run AND train_step)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 2])
+def test_unknown_schedule_raises_clear_error(m):
+    prog = loss_pipeline_program(4)
+    xv, ws, _ = loss_pipeline_values()
+    sess = _fresh(prog, "pipe", ws)
+    for call in (sess.run, sess.train_step):
+        with pytest.raises(api.ScheduleError) as ei:
+            call({"X": xv}, num_microbatches=m, schedule="diagonal")
+        msg = str(ei.value)
+        assert "'diagonal'" in msg
+        for kind in ("1f1b", "gpipe", "interleaved"):
+            assert kind in msg, msg
+
+
+def test_virtual_stages_knob_requires_interleaved():
+    prog = loss_pipeline_program(4)
+    xv, ws, _ = loss_pipeline_values()
+    sess = _fresh(prog, "pipe", ws)
+    with pytest.raises(api.ScheduleError, match="interleaved"):
+        sess.train_step({"X": xv}, num_microbatches=2,
+                        virtual_stages_per_device=2)
+
+
+# ---------------------------------------------------------------------------
+# the train plan itself: backward ExecItems + measured tick durations
+# ---------------------------------------------------------------------------
+
+def test_train_plan_has_backward_exec_items():
+    prog = loss_pipeline_program(4)
+    tplan = prog.compile_train("pipe")
+    for dev in tplan.devices:
+        phases = {i.phase for i in tplan.exec_items(dev)}
+        assert phases == {"fwd", "bwd"}, (dev, phases)
+    # forward-only plans stay pure fwd
+    fplan = prog.compile("pipe")
+    assert all(i.phase == "fwd" for d in fplan.devices
+               for i in fplan.exec_items(d))
+    assert tplan.grad_map and tplan.loss_name == "L"
+    assert set(tplan.grad_map) >= {"W1", "W2", "L"}
+
+
+def test_measured_tick_durations_price_bwd_heavier():
+    prog = loss_pipeline_program(4)
+    tplan = prog.compile_train("pipe")
+    d = tplan.tick_durations()
+    for s in range(2):
+        assert d[(s, "bwd")] > d[(s, "fwd")] > 0.0
+    frac = tplan.fwd_fraction()
+    assert 0.2 < frac < 0.5
+    # forward-only plans price bwd ticks as zero and fall back to the
+    # analytic 1/3 fraction
+    fplan = prog.compile("pipe")
+    df = fplan.tick_durations()
+    assert all(df[(s, "bwd")] == 0.0 for s in range(2))
+    assert fplan.fwd_fraction() == pytest.approx(1.0 / 3.0)
+    # the measured durations re-time the executable schedule
+    sched = tplan.schedule(4)
+    priced = sched.stats(d)
+    assert priced.makespan > 0.0
+
+
+def test_interleaved_chunk_pricing_beats_flat():
+    """The ROADMAP item: per-chunk tick durations give interleaved its
+    real ~1/v bubble advantage in the analytic cost model."""
+    from repro.core import costmodel as cm
+    cluster = cm.paper_cluster(0, 32)
+    strat = cm.uniform_strategy(list(range(32)), cm.LLAMA_32B, dp=1,
+                                tp=4, pp=8, global_batch=16)
+    p = strat.pipelines[0]
+    t_flat = cm.pipeline_time(cluster, cm.LLAMA_32B, p, 4096, "1f1b")
+    t_v2 = cm.pipeline_time(cluster, cm.LLAMA_32B, p, 4096,
+                            "interleaved", virtual_stages_per_device=2)
+    t_v4 = cm.pipeline_time(cluster, cm.LLAMA_32B, p, 4096,
+                            "interleaved", virtual_stages_per_device=4)
+    assert t_v4 < t_v2 < t_flat
+    # v=1 interleaved still degenerates to the 1F1B price
+    t_v1 = cm.pipeline_time(cluster, cm.LLAMA_32B, p, 4096, "interleaved")
+    assert t_v1 == pytest.approx(t_flat)
+    with pytest.raises(ValueError, match="interleaved"):
+        cm.pipeline_time(cluster, cm.LLAMA_32B, p, 4096, "1f1b",
+                         virtual_stages_per_device=2)
+
+
+def test_measured_fwd_fraction_feeds_tick_durations():
+    from repro.core import costmodel as cm
+    prog = loss_pipeline_program(4)
+    tplan = prog.compile_train("pipe")
+    frac = tplan.fwd_fraction()
+    cluster = cm.paper_cluster(0, 16)
+    strat = cm.uniform_strategy(list(range(16)), cm.LLAMA_32B, dp=1,
+                                tp=4, pp=4, global_batch=8)
+    p = strat.pipelines[0]
+    d = cm.pipeline_tick_durations(cluster, cm.LLAMA_32B, p, 4096,
+                                   fwd_fraction=frac)
+    for s in range(4):
+        total = d[(s, "fwd")] + d[(s, "bwd")]
+        assert d[(s, "fwd")] == pytest.approx(total * frac)
+
+
+def test_train_step_rejects_unloaded_params():
+    prog = loss_pipeline_program(4)
+    xv, ws, _ = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load({"W1": ws["W1"]})
+    with pytest.raises(ValueError, match="W2"):
+        sess.train_step({"X": xv})
+
+
+def test_train_step_extra_fetches():
+    prog = loss_pipeline_program(4)
+    xv, ws, want_y = loss_pipeline_values()
+    sess = _fresh(prog, "pipe", ws)
+    tplan = prog.compile_train("pipe")
+    r = sess.train_step({"X": xv}, num_microbatches=2,
+                        fetches=["Y", tplan.grad_map["H2"]])
+    from repro.core.simulator import gather
+    np.testing.assert_array_equal(gather(r.outputs["Y"]), want_y)
+    assert tplan.grad_map["H2"] in r.outputs
