@@ -20,6 +20,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
     ("train_step", "benchmarks.bench_train_step"),
+    ("graph_block", "benchmarks.bench_graph_block"),
 ]
 
 

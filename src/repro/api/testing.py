@@ -91,6 +91,56 @@ def loss_pipeline_values(seed: int = 11):
     return xv, {"W1": w1v, "W2": w2v}, want_y
 
 
+def hetero_program(name: str = "het") -> "api.Program":
+    """An hsize=2 (heterogeneous-subgroup, paper §3.2 top tier) training
+    fixture over 4 devices: subgroup ``[0, 1]`` row-splits its batch
+    slab of ``X`` while subgroup ``[2, 3]`` duplicates its slab (and the
+    activation CommOp ``H2`` swaps those bottom-tier layouts across the
+    slab boundary), with every weight hetero-duplicated.
+
+    The weight gradients therefore come out ``hdim=Partial`` — each
+    subgroup holds the summand contributed by its batch slab, with a
+    further bottom-tier Partial inside whichever subgroup row-split its
+    activations — so the grad-reduce CommOp must resolve the full
+    two-tier reduction (bottom AR inside the split subgroup, then a
+    top-tier SplitAR across subgroups) and both executors must execute
+    it: the hsize>1 gradient path, end to end."""
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W1", (16, 12))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"),
+               name="H")
+    g.comm(h, name="H2")
+    g.parameter("W2", (12, 6))
+    y = g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+    g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+    dup2 = api.DS({api.DUP: 2})
+    strat = api.Strategy(name, {
+        "X": api.HSPMD([[0, 1], [2, 3]], [api.DS({0: 2}), dup2], hdim=0),
+        "W1": api.HSPMD([[0, 1], [2, 3]], [dup2, dup2]),
+        "H2": api.HSPMD([[0, 1], [2, 3]], [dup2, api.DS({0: 2})], hdim=0),
+        "W2": api.HSPMD([[0, 1], [2, 3]], [dup2, dup2]),
+    })
+    return api.Program(g, [strat])
+
+
+def hetero_values(seed: int = 7):
+    """Integer-valued leaves for :func:`hetero_program` plus the exact
+    expected loss and weight gradients (graph-IR ``relu_grad`` uses the
+    ``x > 0`` subgradient at exact zeros — integer data hits them)."""
+    rng = np.random.default_rng(seed)
+    xv = rng.integers(-4, 5, (16, 16)).astype(np.float32)
+    ws = {"W1": rng.integers(-4, 5, (16, 12)).astype(np.float32),
+          "W2": rng.integers(-4, 5, (12, 6)).astype(np.float32)}
+    h0 = xv @ ws["W1"]
+    hh = np.maximum(h0, 0)
+    want_loss = float((hh @ ws["W2"]).sum())
+    d_y = np.ones((16, 6), np.float32)
+    d_h = (d_y @ ws["W2"].T) * (h0 > 0)
+    want_grads = {"W1": xv.T @ d_h, "W2": hh.T @ d_y}
+    return xv, ws, want_loss, want_grads
+
+
 def zigzag_values(seed: int = 11):
     """Integer-valued leaves (exact under float32 summation) and the
     expected full-batch ``Y`` for :func:`zigzag_program`."""
@@ -104,5 +154,6 @@ def zigzag_values(seed: int = 11):
     return xv, ws, want_y
 
 
-__all__ = ["loss_pipeline_program", "loss_pipeline_values",
+__all__ = ["hetero_program", "hetero_values",
+           "loss_pipeline_program", "loss_pipeline_values",
            "zigzag_program", "zigzag_values"]

@@ -89,6 +89,15 @@ class ModelSpec:
         attn = 12 * self.d_model * tokens * seq_len  # score+value matmuls
         return dense + attn
 
+    @classmethod
+    def from_config(cls, cfg) -> "ModelSpec":
+        """Bridge a ``models.config.ModelConfig`` (the named ``configs/``
+        pool — what ``Graph.transformer_block`` builds from) into the
+        analytic cost model, so compiled graph-IR strategies and the
+        Appendix A strategy tables price the same architectures."""
+        return cls(cfg.name, cfg.n_layers, cfg.d_model, cfg.d_ff,
+                   vocab=cfg.vocab)
+
 
 LLAMA_32B = ModelSpec("llama-32b", 60, 6656, 17920)
 LLAMA_70B = ModelSpec("llama-70b", 80, 8192, 28672)

@@ -125,13 +125,51 @@ def _deduce_elementwise(ins: list[HSPMD], shapes) -> HSPMD:
     return base
 
 
+def _entries_from_coords(n_dev: int, coords: "dict[int, list[int]]") -> DS:
+    """Reconstruct an ordered DS from per-device output coordinates.
+
+    ``coords[d][p]`` is device position ``p``'s shard coordinate along
+    output entry ``d`` (Split dim, PARTIAL, or DUP).  A valid DS is a
+    mixed-radix decomposition of ``p``, so each entry's stride is the
+    smallest position that bumps ONLY that coordinate; ordering entries
+    by descending stride and re-checking every position either recovers
+    the unique decomposition or proves none exists (interleaved
+    coordinates — not representable; the caller must insert a CommOp)."""
+    dims = {d: max(c) + 1 for d, c in coords.items() if max(c) > 0}
+    ranked = []
+    for d, n in dims.items():
+        stride = next(
+            (p for p in range(1, n_dev)
+             if coords[d][p] == 1
+             and all(coords[e][p] == 0 for e in dims if e != d)), None)
+        if stride is None:
+            raise DeductionError(
+                "operand shardings interleave; insert CommOp")
+        ranked.append((stride, d, n))
+    ranked.sort(key=lambda t: -t[0])
+    ds = DS([(d, n) for _, d, n in ranked])
+    if ds.num_devices != n_dev:
+        raise DeductionError(
+            "operand shardings interleave; insert CommOp")
+    for p in range(n_dev):
+        c = ds.coords(p)
+        for d in dims:
+            if c.get(d, 0) != coords[d][p]:
+                raise DeductionError(
+                    "operand shardings interleave; insert CommOp")
+    return ds
+
+
 def _dot_ds(x: DS, w: DS, x_ndim: int) -> DS:
     """Fig 11 (left): DS deduction for Dot(X[..., k], W[k, n]).
 
     Split on X's batch/m dims passes through; split on W's n dim becomes
     the output's last dim; matched contraction splits turn into Partial;
-    Duplicate absorbs the rest.
-    """
+    Duplicate absorbs the rest.  The output's entry ORDER is recovered
+    from the two operands' device->coordinate decompositions (not a
+    canonical batch/col/partial ordering): the order fixes which devices
+    share a summand group, and e.g. the ``dw = x^T @ dy`` dots of the
+    backward pass carry their contraction split OUTERMOST."""
     n_dev = x.num_devices
     if w.num_devices != n_dev:
         raise DeductionError("operand subgroups have different device counts")
@@ -140,26 +178,54 @@ def _dot_ds(x: DS, w: DS, x_ndim: int) -> DS:
     if kx != kw:
         raise DeductionError(
             f"contraction dim split mismatch ({kx} vs {kw}); insert CommOp")
-    entries: list[tuple[int, int]] = []
-    for d in range(x_ndim - 1):     # batch / m dims
-        n = x.get(d)
-        if n > 1:
-            entries.append((d, n))
-    n_split = w.get(1)
-    if n_split > 1:
-        entries.append((x_ndim - 1, n_split))
-    partial = x.get(PARTIAL) * w.get(PARTIAL) * kx
-    if partial > 1:
-        entries.append((PARTIAL, partial))
-    used = 1
-    for _, n in entries:
-        used *= n
-    if n_dev % used != 0:
-        raise DeductionError(f"inconsistent sharding: {used} does not divide {n_dev}")
-    dup = n_dev // used
-    if dup > 1:
-        entries.append((DUP, dup))
-    return DS(entries)
+    try:
+        xp, wp = x.get(PARTIAL), w.get(PARTIAL)
+        coords: dict[int, list[int]] = {d: [] for d in range(x_ndim)}
+        coords[PARTIAL] = []
+        dup_seen: dict[tuple, int] = {}
+        coords[DUP] = []
+        for p in range(n_dev):
+            cx, cw = x.coords(p), w.coords(p)
+            ck_x = cx.get(x_ndim - 1, 0)
+            ck_w = cw.get(0, 0)
+            if ck_x != ck_w:
+                raise DeductionError(
+                    "contraction chunks pair different shards across "
+                    "devices")
+            for d in range(x_ndim - 1):
+                coords[d].append(cx.get(d, 0))
+            coords[x_ndim - 1].append(cw.get(1, 0))
+            # summand id: contraction chunk x pre-existing Partial coords
+            coords[PARTIAL].append(
+                (ck_x * xp + cx.get(PARTIAL, 0)) * wp + cw.get(PARTIAL, 0))
+            key = tuple(coords[d][p] for d in range(x_ndim)) \
+                + (coords[PARTIAL][p],)
+            coords[DUP].append(dup_seen.setdefault(key, 0))
+            dup_seen[key] += 1
+        return _entries_from_coords(n_dev, coords)
+    except DeductionError:
+        # count-based Fig 11 fallback for layouts whose decompositions
+        # don't pair positionally (symbolic placements that deduce but
+        # never execute locally): batch splits, then col, then Partial
+        entries: list[tuple[int, int]] = []
+        for d in range(x_ndim - 1):
+            n = x.get(d)
+            if n > 1:
+                entries.append((d, n))
+        if w.get(1) > 1:
+            entries.append((x_ndim - 1, w.get(1)))
+        partial = x.get(PARTIAL) * w.get(PARTIAL) * kx
+        if partial > 1:
+            entries.append((PARTIAL, partial))
+        used = 1
+        for _, n in entries:
+            used *= n
+        if n_dev % used != 0:
+            raise DeductionError(
+                f"inconsistent sharding: {used} does not divide {n_dev}")
+        if n_dev // used > 1:
+            entries.append((DUP, n_dev // used))
+        return DS(entries)
 
 
 def _dot_hdim(x_hdim: int, w_hdim: int, x_ndim: int) -> int:
@@ -198,18 +264,25 @@ def _deduce_sum(ins: list[HSPMD], shapes, dim: int) -> HSPMD:
     ndim = len(shapes[0])
     dss = []
     for ds in a.dss:
-        entries = []
-        partial = ds.get(PARTIAL)
+        # entry ORDER is the device -> shard decomposition, so the
+        # reduced dim's split becomes Partial IN PLACE (the device's
+        # former shard coordinate is now its summand id) — appending it
+        # at the end would pair devices with the wrong summand groups
+        entries: list[tuple[int, int]] = []
         for d, n in ds.entries:
-            if d == dim:
-                partial *= n          # reduced dim's split becomes Partial
+            if d == dim or d == PARTIAL:
+                if entries and entries[-1][0] == PARTIAL:
+                    entries[-1] = (PARTIAL, entries[-1][1] * n)
+                else:
+                    entries.append((PARTIAL, n))
             elif d >= 0:
-                nd = d - 1 if d > dim else d
-                entries.append((nd, n))
-            elif d == DUP:
+                entries.append((d - 1 if d > dim else d, n))
+            else:
                 entries.append((DUP, n))
-        if partial > 1:
-            entries.append((PARTIAL, partial))
+        if sum(1 for d, _ in entries if d == PARTIAL) > 1:
+            raise DeductionError(
+                "sum produces non-adjacent Partial entries (existing "
+                "Partial + reduced split); insert CommOp to reduce first")
         dss.append(DS(entries))
     if a.hdim == dim:
         hdim = PARTIAL
@@ -241,15 +314,17 @@ def _deduce_reshape(ins: list[HSPMD], shapes, new_shape) -> HSPMD:
     (a,) = ins
     old_shape = shapes[0]
 
+    from .symbolic import dim_multiple_of, dims_equal, prod_dims
+
     def map_dim(d: int) -> int:
         # a dim maps if the product of dims before it is preserved
-        import math
-        before = math.prod(old_shape[:d])
-        acc = 1
+        # (symbolic dims compare as canonicalized products)
+        before = prod_dims(old_shape[:d])
+        acc: Dim = 1
         for nd, size in enumerate(new_shape):
-            if acc == before and new_shape[nd] % 1 == 0:
+            if dims_equal(acc, before):
                 return nd
-            acc *= size
+            acc = prod_dims((acc, size))
         raise DeductionError(
             f"reshape moves sharded dim {d}; insert CommOp to replicate")
 
@@ -259,7 +334,8 @@ def _deduce_reshape(ins: list[HSPMD], shapes, new_shape) -> HSPMD:
         for d, n in ds.entries:
             if d >= 0:
                 nd = map_dim(d)
-                if new_shape[nd] % n != 0:
+                # symbolic sizes defer divisibility to bind time
+                if dim_multiple_of(new_shape[nd], n) is False:
                     raise DeductionError(
                         f"reshaped dim {nd} size {new_shape[nd]} not "
                         f"divisible by {n} shards")
@@ -415,9 +491,243 @@ def _deduce_embed_grad(ins: list[HSPMD], shapes) -> HSPMD:
     return HSPMD(da.dgs, dss, hdim=hdim)
 
 
+def _deduce_softmax(ins: list[HSPMD], shapes) -> HSPMD:
+    """Softmax normalizes the last dim: that dim must not be split (the
+    normalizer needs every element) and the input must not be Partial
+    (softmax is nonlinear in the summands)."""
+    (a,) = ins
+    ndim = len(shapes[0])
+    for ds in a.dss:
+        if ds.get(ndim - 1) > 1:
+            raise DeductionError(
+                "softmax dim is split; insert CommOp to gather it")
+        if ds.has_partial:
+            raise DeductionError(
+                "softmax over a Partial tensor is nonlinear; insert "
+                "CommOp to reduce first")
+    if a.hdim == ndim - 1 or a.hdim == PARTIAL:
+        raise DeductionError(
+            "softmax dim top-split or Partial; insert CommOp")
+    return a
+
+
+def _deduce_norm(ins: list[HSPMD], shapes) -> HSPMD:
+    """rmsnorm(x, w) / layernorm(x, w, b): the normalized (last) dim of
+    x must be whole on every device; weights must be replicated along
+    their feature dim (they multiply the un-split last dim)."""
+    u = unify_inputs(ins)
+    x = u[0]
+    ndim = len(shapes[0])
+    for ds in x.dss:
+        if ds.get(ndim - 1) > 1:
+            raise DeductionError(
+                "normalized (last) dim is split; insert CommOp")
+        if ds.has_partial:
+            raise DeductionError(
+                "norm over a Partial tensor is nonlinear; insert CommOp "
+                "to reduce first")
+    if x.hdim == ndim - 1 or x.hdim == PARTIAL:
+        raise DeductionError(
+            "normalized dim top-split or Partial; insert CommOp")
+    for w in u[1:]:
+        for ds in w.dss:
+            if ds.get(0) > 1 or ds.has_partial:
+                raise DeductionError(
+                    "norm weights must be replicated; insert CommOp")
+        if w.hdim != DUP:
+            raise DeductionError(
+                "norm weights must be replicated across subgroups")
+    return x
+
+
+def _deduce_gather(ins: list[HSPMD], shapes) -> HSPMD:
+    """``out[b...] = x[b..., ids[b...]]`` — take along x's last axis.
+    Indices are global along that axis, so it must not be split; leading
+    splits must agree between x and ids; gather is linear in x, so a
+    Partial x passes through, while Partial indices are meaningless."""
+    xa, ia = unify_inputs(ins)
+    x_ndim = len(shapes[0])
+    dss = []
+    for xs, is_ in zip(xa.dss, ia.dss):
+        if xs.get(x_ndim - 1) > 1:
+            raise DeductionError(
+                "gathered (last) dim is split; insert CommOp to "
+                "replicate (indices are global)")
+        if is_.get(PARTIAL) > 1:
+            raise DeductionError("gather indices cannot be Partial")
+        entries: list[tuple[int, int]] = []
+        for d in range(x_ndim - 1):
+            if xs.get(d) != is_.get(d):
+                raise DeductionError(
+                    f"gather: x dim {d} split {xs.get(d)} does not match "
+                    f"ids split {is_.get(d)}; insert CommOp")
+            if is_.get(d) > 1:
+                entries.append((d, is_.get(d)))
+        partial = xs.get(PARTIAL)
+        if partial > 1:
+            entries.append((PARTIAL, partial))
+        n_dev = is_.num_devices
+        used = 1
+        for _, n in entries:
+            used *= n
+        if n_dev % used != 0:
+            raise DeductionError(
+                f"inconsistent gather sharding: {used} does not divide "
+                f"{n_dev}")
+        if n_dev // used > 1:
+            entries.append((DUP, n_dev // used))
+        dss.append(DS(entries))
+    if ia.hdim == PARTIAL or xa.hdim == x_ndim - 1:
+        raise DeductionError(
+            "gather indices Partial or gathered dim top-split; insert "
+            "CommOp")
+    if ia.hdim >= 0 and xa.hdim >= 0 and ia.hdim != xa.hdim:
+        raise DeductionError(
+            "gather operands top-split on different dims; insert CommOp")
+    if ia.hdim >= 0:
+        hdim = ia.hdim
+    elif xa.hdim >= 0 or xa.hdim == PARTIAL:
+        hdim = xa.hdim
+    else:
+        hdim = DUP
+    return HSPMD(ia.dgs, dss, hdim=hdim,
+                 hsplits=ia.hsplits if hdim == ia.hdim else None)
+
+
+def _deduce_attention(ins: list[HSPMD], shapes) -> HSPMD:
+    """attention(q, k, v): q (B,H,Sq,D); k/v (B,K,Sk,D) with H % K == 0.
+
+    Head-dim aware: a TP split over dim 1 passes through when q and k/v
+    carry the SAME shard count (H and K shards pair up groupwise under
+    GQA); batch (dim 0) splits must match; sequence and head_dim splits
+    have no local kernel (softmax spans the key sequence) and Partial
+    operands are nonlinear — both demand a CommOp first."""
+    qa, ka, va = unify_inputs(ins)
+    H, K = shapes[0][1], shapes[1][1]
+    dss = []
+    for qs, ks, vs in zip(qa.dss, ka.dss, va.dss):
+        if ks.entries != vs.entries:
+            raise DeductionError(
+                "attention k and v must share one sharding; insert CommOp")
+        for ds, who in ((qs, "q"), (ks, "k/v")):
+            if ds.has_partial:
+                raise DeductionError(
+                    f"attention {who} is Partial (softmax is nonlinear); "
+                    f"insert CommOp to reduce first")
+            if ds.get(2) > 1 or ds.get(3) > 1:
+                raise DeductionError(
+                    f"attention {who} split along sequence/head_dim; "
+                    f"insert CommOp")
+        if qs.get(0) != ks.get(0):
+            raise DeductionError(
+                "attention batch split mismatch between q and k/v; "
+                "insert CommOp")
+        n = qs.get(1)
+        if ks.get(1) != n:
+            raise DeductionError(
+                f"attention head split mismatch (q {n} vs k/v "
+                f"{ks.get(1)} shards); TP over heads must shard q and "
+                f"k/v with the same group count")
+        if n > 1:
+            if isinstance(H, int) and H % n != 0:
+                raise DeductionError(
+                    f"{H} query heads not divisible by {n} shards")
+            if isinstance(K, int) and K % n != 0:
+                raise DeductionError(
+                    f"{K} kv heads not divisible by {n} shards")
+        dss.append(qs)
+    hdims = {qa.hdim, ka.hdim, va.hdim}
+    if PARTIAL in hdims:
+        raise DeductionError("attention over top-tier Partial; insert CommOp")
+    if hdims - {DUP} and (len(hdims - {DUP}) > 1
+                          or next(iter(hdims - {DUP})) not in (0, 1)):
+        raise DeductionError(
+            "attention operands top-split beyond batch/head dims or on "
+            "different dims; insert CommOp")
+    if qa.hdim != ka.hdim or ka.hdim != va.hdim:
+        raise DeductionError(
+            "attention operands must share one top-tier split; insert "
+            "CommOp")
+    return HSPMD(qa.dgs, dss, hdim=qa.hdim, hsplits=qa.hsplits)
+
+
+def _deduce_norm_grad_x(ins: list[HSPMD], shapes) -> HSPMD:
+    """VJP of rmsnorm/layernorm wrt x: linear in ``dy`` (Partial passes
+    through); the activation must match dy's splits, the weight must be
+    replicated (same constraints the forward op already enforced)."""
+    u = unify_inputs(ins)
+    dy, x = u[0], u[1]
+    for ds_dy, ds_x in zip(dy.dss, x.dss):
+        if ds_x.has_partial:
+            raise DeductionError(
+                "norm_grad_x activation is Partial; insert CommOp")
+        if ({d: n for d, n in ds_x.entries if d >= 0}
+                != {d: n for d, n in ds_dy.entries if d >= 0}):
+            raise DeductionError(
+                "norm_grad_x operands have mismatched split dims; "
+                "insert CommOp")
+    for w in u[2:]:
+        for ds in w.dss:
+            if ds.get(0) > 1 or ds.has_partial:
+                raise DeductionError(
+                    "norm_grad_x weight must be replicated; insert CommOp")
+    return dy
+
+
+def _deduce_reduce_to_vector(ins: list[HSPMD], shapes) -> HSPMD:
+    """norm_grad_w / norm_grad_b: reduce ``dy (..., d)`` over every
+    leading dim to a ``(d,)`` vector.  Leading splits collapse to
+    Partial summands (each device reduces its slice); a Partial dy stays
+    Partial (the reduction is linear); the last dim is whole by the
+    forward norm's own deduction."""
+    u = unify_inputs(ins)
+    dy = u[0]
+    dy_ndim = len(shapes[0])
+    dss = []
+    for k, ds in enumerate(dy.dss):
+        if ds.get(dy_ndim - 1) > 1:
+            raise DeductionError(
+                "norm grad feature (last) dim is split; insert CommOp")
+        for other in u[1:]:
+            if other.dss[k].has_partial:
+                raise DeductionError(
+                    "norm grad activation is Partial; insert CommOp")
+        partial = ds.get(PARTIAL)
+        for d, n in ds.entries:
+            if d >= 0:
+                partial *= n
+        entries: list[tuple[int, int]] = []
+        if partial > 1:
+            entries.append((PARTIAL, partial))
+        n_dev = ds.num_devices
+        used = partial if partial > 1 else 1
+        if n_dev // used > 1:
+            entries.append((DUP, n_dev // used))
+        dss.append(DS(entries))
+    if dy.hdim == dy_ndim - 1:
+        raise DeductionError(
+            "norm grad feature dim top-split; insert CommOp")
+    hdim = PARTIAL if (dy.hdim >= 0 or dy.hdim == PARTIAL) else DUP
+    return HSPMD(dy.dgs, dss, hdim=hdim)
+
+
+def _deduce_gather_grad(ins: list[HSPMD], shapes) -> HSPMD:
+    """VJP of gather: a one-hot scatter along the appended last dim —
+    elementwise over the leading dims, so dy's annotation carries over
+    (the new dim is whole everywhere, as the forward op required)."""
+    u = unify_inputs(ins)
+    dy, ids = u
+    for ds in ids.dss:
+        if ds.has_partial:
+            raise DeductionError("gather_grad indices cannot be Partial")
+    return dy
+
+
 DEDUCTION_RULES = {
     "gelu": lambda ins, shapes, attrs: ins[0],
     "relu": lambda ins, shapes, attrs: ins[0],
+    "silu": lambda ins, shapes, attrs: ins[0],
+    "rsqrt": lambda ins, shapes, attrs: ins[0],
     "scale": lambda ins, shapes, attrs: ins[0],
     "add": lambda ins, shapes, attrs: _deduce_elementwise(ins, shapes),
     "mul": lambda ins, shapes, attrs: _deduce_elementwise(ins, shapes),
@@ -428,10 +738,32 @@ DEDUCTION_RULES = {
     "reshape": lambda ins, shapes, attrs: _deduce_reshape(
         ins, shapes, attrs["new_shape"]),
     "embedding": lambda ins, shapes, attrs: _deduce_embedding(ins, shapes),
+    "softmax": lambda ins, shapes, attrs: _deduce_softmax(ins, shapes),
+    "rmsnorm": lambda ins, shapes, attrs: _deduce_norm(ins, shapes),
+    "layernorm": lambda ins, shapes, attrs: _deduce_norm(ins, shapes),
+    "div": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "gather": lambda ins, shapes, attrs: _deduce_gather(ins, shapes),
+    "attention": lambda ins, shapes, attrs: _deduce_attention(ins, shapes),
     # backward-only kernels (reverse-mode autodiff, Graph.backward)
     "relu_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
     "gelu_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "silu_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
     "mul_grad": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "softmax_grad": lambda ins, shapes, attrs: _deduce_linear_grad(
+        ins, shapes),
+    "norm_grad_x": lambda ins, shapes, attrs: _deduce_norm_grad_x(
+        ins, shapes),
+    "norm_grad_w": lambda ins, shapes, attrs: _deduce_reduce_to_vector(
+        ins, shapes),
+    "norm_grad_b": lambda ins, shapes, attrs: _deduce_reduce_to_vector(
+        ins, shapes),
+    "gather_grad": lambda ins, shapes, attrs: _deduce_gather_grad(ins, shapes),
+    # attn_grad_k/v output k/v-shaped grads, but the split DIMS and
+    # shard COUNTS equal dy's (head-group splits pair q and kv heads),
+    # so the linear-grad rule's pass-through of dy's annotation is exact
+    "attn_grad_q": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "attn_grad_k": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
+    "attn_grad_v": lambda ins, shapes, attrs: _deduce_linear_grad(ins, shapes),
     "bcast": lambda ins, shapes, attrs: _deduce_bcast(
         ins, shapes, attrs["dim"]),
     "embed_grad": lambda ins, shapes, attrs: _deduce_embed_grad(ins, shapes),
@@ -571,6 +903,13 @@ class Graph:
         out_shape = tuple(s for i, s in enumerate(x.shape) if i != dim)
         return self._compute("sum", [x], out_shape, name, dim=dim)
 
+    def bcast(self, x, dim: int, size, name=None):
+        """Insert a broadcast dim of ``size`` at ``dim`` (inverse of
+        ``sum``) — e.g. lifting a ``(d,)`` bias onto ``(B, S, d)``."""
+        out_shape = tuple(x.shape[:dim]) + (size,) + tuple(x.shape[dim:])
+        return self._compute("bcast", [x], out_shape, name, dim=dim,
+                             size=size)
+
     def transpose(self, x, perm, name=None):
         out_shape = tuple(x.shape[p] for p in perm)
         return self._compute("transpose", [x], out_shape, name,
@@ -587,6 +926,65 @@ class Graph:
             raise ValueError("embedding expects a 2D (vocab, dim) table")
         out_shape = tuple(ids.shape) + (table.shape[-1],)
         return self._compute("embedding", [table, ids], out_shape, name)
+
+    def silu(self, x, name=None):
+        return self._compute("silu", [x], x.shape, name)
+
+    def rsqrt(self, x, name=None):
+        return self._compute("rsqrt", [x], x.shape, name)
+
+    def div(self, a, b, name=None):
+        """Elementwise ``a / b`` (same shapes; linear in ``a``)."""
+        return self._compute("div", [a, b], a.shape, name)
+
+    def scale(self, x, factor: float, name=None):
+        return self._compute("scale", [x], x.shape, name,
+                             factor=float(factor))
+
+    def softmax(self, x, name=None):
+        """Softmax over the LAST dim."""
+        return self._compute("softmax", [x], x.shape, name)
+
+    def rmsnorm(self, x, w, eps: float = 1e-5, name=None):
+        """RMSNorm over the last dim: ``x * rsqrt(mean(x^2) + eps) * w``."""
+        return self._compute("rmsnorm", [x, w], x.shape, name,
+                             norm="rms", eps=float(eps))
+
+    def layernorm(self, x, w, b, eps: float = 1e-5, name=None):
+        """LayerNorm over the last dim: ``(x - mu) * rsqrt(var + eps) * w + b``."""
+        return self._compute("layernorm", [x, w, b], x.shape, name,
+                             norm="layer", eps=float(eps))
+
+    def gather(self, x, ids, name=None):
+        """``out[b...] = x[b..., ids[b...]]`` — take along x's last axis
+        (the label-probability pick of a cross-entropy loss)."""
+        if len(ids.shape) != len(x.shape) - 1:
+            raise ValueError(
+                f"gather expects ids with rank {len(x.shape) - 1}, got "
+                f"{len(ids.shape)}")
+        return self._compute("gather", [x, ids], tuple(ids.shape), name)
+
+    def attention(self, q, k, v, causal: bool = True, name=None):
+        """Scaled-dot-product attention: ``q (B, H, Sq, D)``, ``k``/``v``
+        ``(B, K, Sk, D)`` with ``H % K == 0`` (GQA).  Lowered per device
+        to the Pallas flash kernel or the pure-XLA reference according
+        to ``kernels.policy`` (see ``runtime.program``)."""
+        for t in (q, k, v):
+            if len(t.shape) != 4:
+                raise ValueError("attention expects 4D (B, heads, S, D)")
+        H, K = q.shape[1], k.shape[1]
+        if isinstance(H, int) and isinstance(K, int) and H % K != 0:
+            raise ValueError(
+                f"attention query heads {H} not a multiple of kv heads {K}")
+        return self._compute("attention", [q, k, v], q.shape, name,
+                             causal=bool(causal))
+
+    def transformer_block(self, cfg, **kw):
+        """Append one full transformer block (pre-norm attention + MLP)
+        shaped by a ``configs`` ModelConfig; see ``models.graph_block``
+        for the layout and the TP×DP×PP annotation helper."""
+        from ..models.graph_block import build_block
+        return build_block(self, cfg, **kw)
 
     # -- reverse-mode autodiff ----------------------------------------------
     def _bwd(self, kind: str, ins: list[Tensor], out_shape, anchor: str,
@@ -614,6 +1012,23 @@ class Graph:
     def _bwd_comm(self, x: Tensor, annots, anchor: str,
                   grad_of: str | None = None,
                   name: str | None = None) -> Tensor:
+        # a Partial gradient whose SPLIT structure also changes (e.g.
+        # dw [(Partial,dp),(1,tp)] -> a replicated param) is not one
+        # collective; all-reduce in place first, then redistribute
+        hops, hop_needed = [], False
+        for have, tgt in zip(x.annots, list(annots)):
+            def _splits(a):
+                return [{d: n for d, n in ds.entries if d >= 0}
+                        for ds in a.dss]
+            if (have.has_partial and not annots_equal(have, tgt)
+                    and any(_splits(have)) and _splits(have) != _splits(tgt)
+                    and have.same_dg_union(tgt)):
+                hops.append(departialize(have))
+                hop_needed = True
+            else:
+                hops.append(have)
+        if hop_needed:
+            x = self._bwd_comm(x, hops, anchor)
         out = self.comm(x, list(annots), name=name)
         op = out.producer
         op.attrs["phase"] = "bwd"
@@ -715,9 +1130,14 @@ class Graph:
         grad_map: dict[str, str] = {}
 
         # seed: dL/dL == 1 on the loss's cotangent placement (a Partial
-        # loss — per-device summands — receives a Duplicate seed)
-        seed = self._add_tensor(f"d/{loss_t.name}", (),
-                                [cotangent_annot(a) for a in loss_t.annots])
+        # loss — per-device summands — receives a Duplicate seed).  The
+        # full-value carrier (departialize) is essential: a Duplicate
+        # entry in the loss swaps to Partial in the cotangent, and a
+        # "ones" op materializing 1.0 per summand would represent a seed
+        # of n, silently scaling every gradient
+        seed = self._add_tensor(
+            f"d/{loss_t.name}", (),
+            [departialize(cotangent_annot(a)) for a in loss_t.annots])
         seed_op = Op("ones", [], [seed],
                      {"phase": "bwd", "grad_of": loss_t.name,
                       "fwd_anchor": loss_t.name})
@@ -916,13 +1336,10 @@ def _vjp_dot(g: "Graph", op: Op, dy: Tensor) -> list:
     if len(x.shape) == 2:
         x2, dy2 = x, dy
     else:
-        import math
-        lead = x.shape[:-1]
-        if not all(isinstance(s, int) for s in lead):
-            raise GradError(
-                f"dot VJP over >2D operand {x.name!r} needs concrete "
-                f"leading dims (bind symbolic shapes first)")
-        m = math.prod(lead)
+        # symbolic leading dims flatten as expression trees (prod_dims)
+        # and bind alongside the rest of the shape at compile time
+        from .symbolic import prod_dims
+        m = prod_dims(x.shape[:-1])
         x2 = g._bwd("reshape", [x], (m, x.shape[-1]), anchor,
                     new_shape=(m, x.shape[-1]))
         dy2 = g._bwd("reshape", [dy], (m, w.shape[1]), anchor,
@@ -938,6 +1355,12 @@ def _vjp_sum(g: "Graph", op: Op, dy: Tensor) -> list:
     dim = op.attrs["dim"]
     return [g._bwd("bcast", [dy], tuple(x.shape), op.outputs[0].name,
                    grad_of=x.name, dim=dim, size=x.shape[dim])]
+
+
+def _vjp_bcast(g: "Graph", op: Op, dy: Tensor) -> list:
+    (x,) = op.inputs
+    return [g._bwd("sum", [dy], tuple(x.shape), op.outputs[0].name,
+                   grad_of=x.name, dim=op.attrs["dim"])]
 
 
 def _vjp_transpose(g: "Graph", op: Op, dy: Tensor) -> list:
@@ -971,18 +1394,91 @@ def _vjp_comm(g: "Graph", op: Op, dy: Tensor) -> list:
     return [dy]
 
 
+def _vjp_softmax(g: "Graph", op: Op, dy: Tensor) -> list:
+    (x,) = op.inputs
+    y = op.outputs[0]
+    return [g._bwd("softmax_grad", [dy, y], tuple(x.shape), y.name,
+                   grad_of=x.name)]
+
+
+def _vjp_rsqrt(g: "Graph", op: Op, dy: Tensor) -> list:
+    # d(x^-1/2)/dx = -x^-3/2 / 2 = -y^3 / 2, from the saved output
+    (x,) = op.inputs
+    y = op.outputs[0]
+    t = dy
+    for _ in range(3):
+        t = g._bwd("mul_grad", [t, y], tuple(x.shape), y.name)
+    return [g._bwd("scale", [t], tuple(x.shape), y.name, grad_of=x.name,
+                   factor=-0.5)]
+
+
+def _vjp_div(g: "Graph", op: Op, dy: Tensor) -> list:
+    a, b = op.inputs
+    y = op.outputs[0]
+    da = g._bwd("div", [dy, b], tuple(a.shape), y.name, grad_of=a.name)
+    # db = -dy * a / b^2 = -(dy * y) / b, reusing the saved quotient
+    t = g._bwd("mul_grad", [dy, y], tuple(b.shape), y.name)
+    t = g._bwd("div", [t, b], tuple(b.shape), y.name)
+    db = g._bwd("scale", [t], tuple(b.shape), y.name, grad_of=b.name,
+                factor=-1.0)
+    return [da, db]
+
+
+def _vjp_norm(g: "Graph", op: Op, dy: Tensor) -> list:
+    x, w = op.inputs[0], op.inputs[1]
+    anchor = op.outputs[0].name
+    attrs = {"norm": op.attrs.get("norm", "rms"),
+             "eps": op.attrs.get("eps", 1e-5)}
+    dx = g._bwd("norm_grad_x", [dy, x, w], tuple(x.shape), anchor,
+                grad_of=x.name, **attrs)
+    dw = g._bwd("norm_grad_w", [dy, x], tuple(w.shape), anchor,
+                grad_of=w.name, **attrs)
+    grads = [dx, dw]
+    if len(op.inputs) == 3:       # layernorm bias
+        b = op.inputs[2]
+        grads.append(g._bwd("norm_grad_b", [dy], tuple(b.shape), anchor,
+                            grad_of=b.name))
+    return grads
+
+
+def _vjp_gather(g: "Graph", op: Op, dy: Tensor) -> list:
+    x, ids = op.inputs
+    dx = g._bwd("gather_grad", [dy, ids], tuple(x.shape),
+                op.outputs[0].name, grad_of=x.name)
+    return [dx, None]  # integer indices carry no gradient
+
+
+def _vjp_attention(g: "Graph", op: Op, dy: Tensor) -> list:
+    q, k, v = op.inputs
+    anchor = op.outputs[0].name
+    causal = op.attrs.get("causal", True)
+    return [g._bwd(kind, [dy, q, k, v], tuple(t.shape), anchor,
+                   grad_of=t.name, causal=causal)
+            for kind, t in (("attn_grad_q", q), ("attn_grad_k", k),
+                            ("attn_grad_v", v))]
+
+
 VJP_RULES = {
     "gelu": _vjp_elementwise_act("gelu_grad"),
     "relu": _vjp_elementwise_act("relu_grad"),
+    "silu": _vjp_elementwise_act("silu_grad"),
     "scale": _vjp_scale,
     "add": _vjp_add,
     "mul": _vjp_mul,
     "dot": _vjp_dot,
     "sum": _vjp_sum,
+    "bcast": _vjp_bcast,
     "transpose": _vjp_transpose,
     "reshape": _vjp_reshape,
     "embedding": _vjp_embedding,
     "comm": _vjp_comm,
+    "softmax": _vjp_softmax,
+    "rsqrt": _vjp_rsqrt,
+    "div": _vjp_div,
+    "rmsnorm": _vjp_norm,
+    "layernorm": _vjp_norm,
+    "gather": _vjp_gather,
+    "attention": _vjp_attention,
 }
 
 

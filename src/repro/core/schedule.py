@@ -568,14 +568,15 @@ def microbatch_roles(graph: Graph, batch_dim: int = 0) -> dict[str, int]:
 
 def _map_reshape_dim(d: int, old_shape, new_shape, name: str) -> int:
     """The batch dim survives a reshape iff the leading-dims product is
-    preserved (the same rule annotation deduction uses)."""
-    import math
-    before = math.prod(old_shape[:d])
+    preserved (the same rule annotation deduction uses; symbolic dims
+    compare as canonicalized products)."""
+    from .symbolic import dims_equal, prod_dims
+    before = prod_dims(old_shape[:d])
     acc = 1
     for nd, size in enumerate(new_shape):
-        if acc == before:
+        if dims_equal(acc, before):
             return nd
-        acc *= size
+        acc = prod_dims((acc, size))
     raise MicrobatchError(
         f"{name!r}: reshape moves the microbatch (batch) dim {d}")
 

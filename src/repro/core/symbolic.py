@@ -88,6 +88,60 @@ def _binop(op: str, l, r) -> BinOp:
     return BinOp(op, l, r)
 
 
+def prod_dims(dims) -> Dim:
+    """Product of a run of dims, staying an ``int`` when every factor is
+    concrete and an expression tree otherwise (the flattened leading dim
+    of a >2D dot VJP over symbolic batch/seq axes)."""
+    out: Dim = 1
+    for d in dims:
+        if isinstance(out, int) and isinstance(d, int):
+            out *= d
+        elif isinstance(out, int) and out == 1:
+            out = d
+        else:
+            out = out * d
+    return out
+
+
+def _prod_key(d: Dim):
+    """``(coefficient, sorted symbol names)`` canonical form of a pure
+    product expression; ``None`` for anything else (sums, floordivs)."""
+    if isinstance(d, int):
+        return (d, ())
+    if isinstance(d, Sym):
+        return (1, (d.name,))
+    if isinstance(d, BinOp) and d.op == "*":
+        l, r = _prod_key(d.lhs), _prod_key(d.rhs)
+        if l is None or r is None:
+            return None
+        return (l[0] * r[0], tuple(sorted(l[1] + r[1])))
+    return None
+
+
+def dims_equal(a: Dim, b: Dim) -> bool:
+    """Dim equality that recognizes product expressions up to factor
+    order (``B*S == S*B``); concrete ints compare numerically, other
+    expressions structurally."""
+    if isinstance(a, int) and isinstance(b, int):
+        return a == b
+    ka, kb = _prod_key(a), _prod_key(b)
+    if ka is not None and kb is not None:
+        return ka == kb
+    return a == b
+
+
+def dim_multiple_of(d: Dim, n: int):
+    """``True``/``False`` when divisibility by ``n`` is provable from the
+    dim alone; ``None`` when a symbolic dim defers the check to bind
+    time (``annotations.local_box`` re-validates on concrete shapes)."""
+    if isinstance(d, int):
+        return d % n == 0
+    k = _prod_key(d)
+    if k is not None and k[0] % n == 0:
+        return True
+    return None
+
+
 def bind_shape(shape: tuple[Dim, ...], env: Mapping[str, int]) -> tuple[int, ...]:
     out = []
     for d in shape:

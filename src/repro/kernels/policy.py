@@ -4,16 +4,29 @@
 RG-LRU scan) in the model layers onto the Pallas TPU kernels;
 ``"ref"`` forces the pure-XLA path (the default on CPU, and the path
 the multi-pod dry-run lowers — Mosaic kernels target real TPUs).
+
+The graph-IR runtime consumes the same policy through
+:func:`select_attention_impl`: when ``runtime.program`` lowers an
+``attention`` ExecItem it asks this module — per device, with the
+device-LOCAL shard shapes — whether the Pallas flash kernel applies
+(``kernels.flash_attention``) or the pure-XLA reference must run
+(``kernels.ref.flash_attention_ref``).  The decision is static per
+compiled program and is tallied in ``LoweringStats``.
 """
 
 from __future__ import annotations
+
+VALID_POLICIES = ("auto", "pallas", "ref")
 
 _POLICY = "auto"
 
 
 def set_policy(policy: str) -> None:
+    if policy not in VALID_POLICIES:
+        raise ValueError(
+            f"unknown kernel policy {policy!r}; valid policies: "
+            f"{', '.join(VALID_POLICIES)}")
     global _POLICY
-    assert policy in ("auto", "pallas", "ref")
     _POLICY = policy
 
 
@@ -28,3 +41,26 @@ def use_pallas() -> bool:
     if _POLICY == "ref":
         return False
     return jax.default_backend() == "tpu"
+
+
+def attention_eligible(q_shape, kv_shape, *, block_q: int = 128,
+                       block_k: int = 128) -> bool:
+    """Whether the Pallas flash-attention kernel can take these
+    device-local shards: ``q (B, H, Sq, D)``, ``k/v (B, K, Sk, D)``.
+    Mirrors the kernel's own constraints (GQA head ratio, sequence
+    lengths tiled by the block sizes, lane-aligned head dim)."""
+    if len(q_shape) != 4 or len(kv_shape) != 4:
+        return False
+    _, h, sq, d = q_shape
+    _, kh, sk, kd = kv_shape
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    return (kh >= 1 and h % kh == 0 and d == kd and d % 8 == 0
+            and sq % bq == 0 and sk % bk == 0)
+
+
+def select_attention_impl(q_shape, kv_shape) -> str:
+    """``"pallas"`` or ``"ref"`` for one device-local attention dispatch
+    (the graph-IR lowering seam; see ``runtime.program``)."""
+    if use_pallas() and attention_eligible(q_shape, kv_shape):
+        return "pallas"
+    return "ref"

@@ -84,13 +84,18 @@ class DeviceOrder:
 
 @dataclass
 class LoweringStats:
-    """Static collective-launch accounting of one lowered plan."""
+    """Static collective-launch accounting of one lowered plan, plus the
+    kernel-dispatch tallies of the compute seam (``runtime.program``):
+    how many per-device attention ExecItems lowered onto the Pallas
+    flash kernel vs the pure-XLA reference (``kernels.policy``)."""
 
     copy_pairs: int = 0      # point-to-point (src, dst) deliveries
     ppermute_calls: int = 0  # batched permutes emitted after fusion
     reduce_groups: int = 0   # all_gather / psum launches
     grouped_reduces: int = 0  # of which run on axis_index_groups subgroups
     stages: int = 0
+    ref_dispatches: int = 0     # compute items on the pure-XLA reference
+    pallas_dispatches: int = 0  # compute items on the Pallas kernels
 
     def merge(self, other: "LoweringStats") -> None:
         self.copy_pairs += other.copy_pairs
@@ -98,6 +103,8 @@ class LoweringStats:
         self.reduce_groups += other.reduce_groups
         self.grouped_reduces += other.grouped_reduces
         self.stages += other.stages
+        self.ref_dispatches += other.ref_dispatches
+        self.pallas_dispatches += other.pallas_dispatches
 
 
 def pack_shards(parts, annot: HSPMD, shape: tuple[int, ...], n_mesh: int,

@@ -45,6 +45,7 @@ from repro.core.simulator import ShardedTensor
 from repro.core.specialize import resolve_comm_ops
 from repro.core.symbolic import bind_shape
 from repro.core.topology import Topology
+from repro.kernels.policy import select_attention_impl
 
 from .lowering import (DeviceOrder, LoweringStats, PlanLowering, maybe_x64,
                        pack_shards, pad_shape)
@@ -139,6 +140,29 @@ class LoweredGraph:
             self.stats.merge(pl.stats)
             has_reduce |= pl.has_reduce
 
+        # Kernel dispatch is decided STATICALLY, per (op, device), from the
+        # device-LOCAL shard shapes — a TP-split head dim can make a shard
+        # kernel-eligible (or not) independent of the global shape.  The
+        # jitted body is traced lazily, so the tally lives here, not in a
+        # trace-time hook.
+        self._attn_impl: dict[tuple[int, int], str] = {}
+        for op in graph.ops:
+            if op.kind != "attention":
+                continue
+            annot = op.outputs[0].annots[strategy]
+            qa, ka = op.inputs[0].annots[strategy], op.inputs[1].annots[strategy]
+            qs = self.shapes[op.inputs[0].name]
+            ks = self.shapes[op.inputs[1].name]
+            for dev in annot.devices:
+                impl = select_attention_impl(
+                    tuple(qa.device_shape(dev, qs)),
+                    tuple(ka.device_shape(dev, ks)))
+                self._attn_impl[(id(op), dev)] = impl
+                if impl == "pallas":
+                    self.stats.pallas_dispatches += 1
+                else:
+                    self.stats.ref_dispatches += 1
+
         k, order, n_mesh, shapes = strategy, self.order, self.n_mesh, \
             self.shapes
 
@@ -160,10 +184,19 @@ class LoweredGraph:
                              for t in op.inputs]
                 out_local = tuple(annot.device_shape(dev, out_shape))
 
+                impl = self._attn_impl.get((id(op), dev), "ref")
+
                 def f(*vs):
                     locs = [v[tuple(slice(0, s) for s in shp)]
                             for v, shp in zip(vs, in_shapes)]
-                    y = local_apply(op.kind, jnp, locs, op.attrs, out_local)
+                    if impl == "pallas":
+                        from repro.kernels.ops import attention as attn_kernel
+                        y = attn_kernel(*locs,
+                                        causal=op.attrs.get("causal", True),
+                                        use_kernel="pallas")
+                    else:
+                        y = local_apply(op.kind, jnp, locs, op.attrs,
+                                        out_local)
                     buf = jnp.zeros(out_pad, dtype)
                     return buf.at[tuple(slice(0, s)
                                         for s in y.shape)].set(

@@ -522,6 +522,61 @@ def run_all(max_devices: int = 8) -> dict:
             return {"loss": base.loss}
         record(f"api:train/interleaved{n}", train_interleaved_case)
 
+    # 7e. hsize>1 TRAINING: the heterogeneous-subgroup fixture's weight
+    #     gradients come out hdim=Partial (one summand per subgroup's
+    #     batch slab, plus a bottom-tier Partial inside the row-split
+    #     subgroup), so the grad-reduce CommOp resolves the full
+    #     two-tier reduction (bottom AR then top SplitAR) and BOTH
+    #     executors execute it — integer leaves, so losses, gradient
+    #     shards and every duplicate copy are bit-exact sim vs jax and
+    #     equal to the dense numpy reference
+    def train_hetero_case():
+        from repro import api
+        from repro.api.testing import hetero_program, hetero_values
+        from repro.core.comm_resolve import resolve
+
+        prog = hetero_program()
+        xv, ws, want_loss, want_grads = hetero_values(seed=7)
+
+        # the compiled grad comms really carry hetero Partial sources
+        tplan = prog.compile_train("het", loss="L")
+        gg = tplan.graph
+        plan_kinds = {}
+        for p in ws:
+            carrier = gg.tensors[gg.grad_map[p]]
+            src = carrier.producer.inputs[0].annots[0]
+            assert src.hsize == 2 and src.hdim == PARTIAL, (p, src)
+            plan = resolve(src, carrier.annots[0],
+                           tuple(carrier.shape))
+            assert "SplitAR" in plan.kind, (p, plan.kind)
+            plan_kinds[p] = plan.kind
+
+        runs = {}
+        for m in (1, 2):
+            for ex in (api.SimulatorExecutor(), api.JaxExecutor(meshes[4])):
+                sess = api.Session(prog, "het", executor=ex)
+                sess.load(ws)
+                r = sess.train_step({"X": xv}, num_microbatches=m)
+                assert r.loss == want_loss, (ex.name, m, r.loss)
+                runs[(ex.name, m)] = r
+        base = runs[("sim", 1)]
+        for name, want in want_grads.items():
+            for dev, part in base.grads[name].parts.items():
+                np.testing.assert_array_equal(
+                    part, want.astype(np.float32),
+                    err_msg=f"hetero grad {name} dev {dev} vs dense ref")
+        for (exn, m), r in runs.items():
+            for name in ws:
+                a, b = base.grads[name], r.grads[name]
+                for dev in a.parts:
+                    np.testing.assert_array_equal(
+                        b.parts[dev], a.parts[dev],
+                        err_msg=f"hetero grad {name} dev {dev}: "
+                                f"{exn}/m={m} differs")
+        return {"loss": want_loss, "grad_comms": plan_kinds}
+    if 4 in meshes:
+        record("api:train/hetero4", train_hetero_case)
+
     # 8. axis_index_groups subgroup reduces: a SplitAR plan lowers its
     #    cross-subgroup reduce groups onto grouped collectives (the kind
     #    sweep above re-proves bit-exactness on both reduction paths)

@@ -124,6 +124,131 @@ def test_vjp_dot_3d_operand():
     np.testing.assert_allclose(got["B"], jb, atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("kind", ["silu", "rsqrt", "div", "softmax",
+                                  "rmsnorm", "layernorm", "gather",
+                                  "bcast", "attention"])
+def test_new_op_vjp_matches_jax_grad(kind, seed):
+    """Per-new-op VJP differentials vs jax.grad (the transformer-block
+    op set added with the graph-IR block)."""
+    rng = np.random.default_rng(100 + seed)
+    m, n = (int(v) for v in rng.integers(3, 7, 2))
+    g = Graph()
+    one = [spmd([0], DS({}))]
+    eps = 1e-5
+    extra = {}
+    if kind == "silu":
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (m, n), one)
+        out = g.silu(g.mul(a, b))
+        ref = lambda av, bv: jax.nn.silu(av * bv)         # noqa: E731
+    elif kind == "rsqrt":
+        # rsqrt(a*a + b*b): positive input, and each operand feeds mul
+        # twice (multi-consumer accumulation through the new VJP)
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (m, n), one)
+        out = g.rsqrt(g.add(g.mul(a, a), g.mul(b, b)))
+        ref = lambda av, bv: jax.lax.rsqrt(av * av + bv * bv)  # noqa: E731
+    elif kind == "div":
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (m, n), one)
+        out = g.div(a, b)
+        ref = lambda av, bv: av / bv                      # noqa: E731
+    elif kind == "softmax":
+        # softmax alone scalarizes to a constant (rows sum to 1), so
+        # weight the probabilities to keep the loss sensitive
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (m, n), one)
+        out = g.mul(g.softmax(a), b)
+        ref = lambda av, bv: jax.nn.softmax(av, axis=-1) * bv  # noqa: E731
+    elif kind == "rmsnorm":
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (n,), one)
+        out = g.rmsnorm(a, b, eps=eps)
+        ref = lambda av, bv: av * jax.lax.rsqrt(          # noqa: E731
+            jnp.mean(av * av, -1, keepdims=True) + eps) * bv
+    elif kind == "layernorm":
+        # bias reuses the gain tensor: accumulation through both roles
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (n,), one)
+        out = g.layernorm(a, b, b, eps=eps)
+
+        def ref(av, bv):
+            mu = jnp.mean(av, -1, keepdims=True)
+            var = jnp.mean((av - mu) ** 2, -1, keepdims=True)
+            return (av - mu) * jax.lax.rsqrt(var + eps) * bv + bv
+    elif kind == "gather":
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (m, n), one)
+        ids = g.placeholder("ids", (m,), one)
+        iv = rng.integers(0, n, (m,)).astype(np.int32)
+        extra["ids"] = iv
+        out = g.gather(g.mul(a, b), ids)
+        ref = lambda av, bv: jnp.take_along_axis(         # noqa: E731
+            av * bv, iv[:, None], axis=-1)[:, 0]
+    elif kind == "bcast":
+        a = g.placeholder("A", (m, n), one)
+        b = g.parameter("B", (3, m, n), one)
+        out = g.mul(g.bcast(a, 0, 3), b)
+        ref = lambda av, bv: jnp.broadcast_to(av, (3, m, n)) * bv  # noqa: E731,E501
+    else:  # attention (k and v share a tensor: accumulation again)
+        B_, H, S, D = 2, 2, 4, 3
+        a = g.placeholder("A", (B_, H, S, D), one)
+        b = g.parameter("B", (B_, H, S, D), one)
+        out = g.attention(a, b, b, causal=True)
+
+        def ref(av, bv):
+            s = jnp.einsum("bhqd,bhkd->bhqk", av, bv) / np.sqrt(D)
+            mask = jnp.tril(jnp.ones((S, S), bool))
+            s = jnp.where(mask, s, -jnp.inf)
+            return jnp.einsum("bhqk,bhkd->bhqd",
+                              jax.nn.softmax(s, axis=-1), bv)
+    _scalarize(g, out)
+
+    if kind in ("rsqrt", "div"):
+        av = rng.uniform(0.5, 2.0, g.tensors["A"].shape).astype(np.float32)
+        bv = rng.uniform(0.5, 2.0, g.tensors["B"].shape).astype(np.float32)
+    else:
+        av = rng.normal(size=g.tensors["A"].shape).astype(np.float32)
+        bv = rng.normal(size=g.tensors["B"].shape).astype(np.float32)
+    gm, got = _run_grads(g, {"A": av, "B": bv, **extra}, ["A", "B"])
+    ja, jb = jax.grad(lambda a_, b_: jnp.sum(ref(a_, b_)),
+                      argnums=(0, 1))(av, bv)
+    np.testing.assert_allclose(got["A"], ja, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(got["B"], jb, atol=1e-4, rtol=1e-3)
+
+
+def test_vjp_dot_symbolic_leading_dims():
+    """Regression: the dot VJP used to reject symbolic leading dims
+    (the dw = flatten(x)^T @ flatten(dy) reshape needed concrete
+    products); it now carries prod_dims expression trees and binds at
+    compile time."""
+    from repro.core.symbolic import Sym
+
+    rng = np.random.default_rng(5)
+    g = Graph()
+    one = [spmd([0], DS({}))]
+    a = g.placeholder("A", (Sym("B"), Sym("S"), 4), one)
+    b = g.parameter("W", (4, 5), one)
+    _scalarize(g, g.dot(a, b))
+    g.deduce()
+    gm = g.backward()
+    prog = Program.from_annotated(g)
+    plan = prog.compile(0, shape_env={"B": 2, "S": 3})
+    av = rng.normal(size=(2, 3, 4)).astype(np.float32)
+    bv = rng.normal(size=(4, 5)).astype(np.float32)
+    state = {name: scatter(np.asarray(v), g.tensors[name].annots[0],
+                           rng=np.random.default_rng(0))
+             for name, v in (("A", av), ("W", bv))}
+    outs = SimulatorExecutor().run(plan, state, [gm["A"], gm["W"]])
+    ja, jw = jax.grad(lambda a_, b_: jnp.sum(a_ @ b_),
+                      argnums=(0, 1))(av, bv)
+    np.testing.assert_allclose(gather(outs[gm["A"]]), ja,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(gather(outs[gm["W"]]), jw,
+                               atol=1e-4, rtol=1e-4)
+
+
 def test_vjp_embedding_scatter_add():
     rng = np.random.default_rng(4)
     g = Graph()

@@ -168,3 +168,38 @@ def test_ops_dispatch_ref_vs_pallas():
     a = ops.attention(q, k, v, use_kernel="ref")
     b = ops.attention(q, k, v, use_kernel="pallas", interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_set_policy_rejects_unknown_policy():
+    """Regression: set_policy validated with a bare assert (stripped
+    under ``python -O``); it must raise ValueError naming the valid
+    policies."""
+    from repro.kernels import policy
+
+    with pytest.raises(ValueError, match="auto, pallas, ref"):
+        policy.set_policy("fast")
+    assert policy.get_policy() == "auto"  # unchanged on rejection
+    policy.set_policy("ref")
+    try:
+        assert policy.get_policy() == "ref"
+    finally:
+        policy.set_policy("auto")
+
+
+def test_select_attention_impl_honours_policy_and_eligibility():
+    from repro.kernels import policy
+
+    ok_q, ok_kv = (1, 4, 128, 64), (1, 2, 128, 64)
+    bad_q, bad_kv = (1, 4, 128, 60), (1, 2, 128, 60)  # d % 8 != 0
+    policy.set_policy("pallas")
+    try:
+        assert policy.select_attention_impl(ok_q, ok_kv) == "pallas"
+        assert policy.select_attention_impl(bad_q, bad_kv) == "ref"
+    finally:
+        policy.set_policy("auto")
+    # ref policy forces the reference even for eligible shards
+    policy.set_policy("ref")
+    try:
+        assert policy.select_attention_impl(ok_q, ok_kv) == "ref"
+    finally:
+        policy.set_policy("auto")
