@@ -1,0 +1,110 @@
+"""Automated strategy search: enumeration throughput, search wall time,
+and predicted-vs-measured winner step time per CPU fixture.
+
+The search subsystem's cost (`repro.search`): how fast the candidate
+grid enumerates, how long a full enumerate -> prune -> rank search
+takes, and — with execution validation — how the winner's cost-model
+prediction compares against its re-priced executed makespan (plus the
+top-3 ordering agreement).  Emits ``BENCH_search.json``::
+
+    PYTHONPATH=src python -m benchmarks.bench_search [--smoke]
+
+``--smoke`` (what CI runs) keeps the homogeneous fixture and fewer
+measurement rounds — a liveness check for the whole search -> validate
+path, not a measurement.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _configs(smoke: bool):
+    from repro.search import cpu_cluster, cpu_hetero_cluster
+
+    out = [("homog4", cpu_cluster(4),
+            dict(tp_options=(1,), pp_options=(1, 2, 4),
+                 virtual_options=(1, 2), include_hetero=False))]
+    if not smoke:
+        out.append(("hetero2x2", cpu_hetero_cluster(2, 2),
+                    dict(tp_options=(1,), pp_options=(1, 2),
+                         pipeline_options=(1, 2),
+                         virtual_options=(1,))))
+    return out
+
+
+def bench(smoke: bool = False) -> dict:
+    from repro.search import Searcher, tiny_spec
+
+    repeats = 2 if smoke else 5
+    out: dict = {"smoke": smoke, "cases": {}}
+    for label, cluster, grid in _configs(smoke):
+        searcher = Searcher(tiny_spec(), global_batch=8, seq_len=128,
+                            **grid)
+        t0 = time.perf_counter()
+        cands = searcher.candidates(cluster)
+        t_enum = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        result = searcher.search(cluster)
+        t_search = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        validated = searcher.search(cluster, validate_top=3,
+                                    repeats=repeats, batch=64, d=64,
+                                    f=128)
+        t_validate = time.perf_counter() - t0
+        val = validated.validation
+        best = next(e for e in val.executed
+                    if e.name == validated.best.name)
+        measured = best.projected_makespan_s or best.measured_makespan_s
+        out["cases"][label] = {
+            "n_candidates": len(cands),
+            "enumerate_seconds": t_enum,
+            "candidates_per_second": len(cands) / t_enum,
+            "search_seconds": t_search,
+            "n_survivors": len(result.ranked),
+            "validate_seconds": t_validate,
+            "winner": validated.best.name,
+            "winner_predicted_s": validated.best.predicted_step_s,
+            "winner_measured_s": measured,
+            "agreement": val.agreement(),
+            "speed_projected": val.speed_projected,
+        }
+    return out
+
+
+def rows(report: dict | None = None):
+    report = report or bench()
+    out = []
+    for label, case in sorted(report["cases"].items()):
+        out.append((f"search/{label}/enumerate",
+                    case["enumerate_seconds"],
+                    f"candidates_per_s={case['candidates_per_second']:.0f} "
+                    f"n={case['n_candidates']}"))
+        out.append((f"search/{label}/search", case["search_seconds"],
+                    f"survivors={case['n_survivors']}"))
+        out.append((f"search/{label}/validate",
+                    case["validate_seconds"],
+                    f"winner={case['winner']} "
+                    f"predicted={case['winner_predicted_s']:.3f}s "
+                    f"measured={case['winner_measured_s'] * 1e3:.3f}ms "
+                    f"agreement={case['agreement']:.2f}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="homogeneous fixture only, fewer rounds (CI)")
+    args = ap.parse_args()
+    report = bench(smoke=args.smoke)
+    for name, seconds, derived in rows(report):
+        print(f"{name},{seconds * 1e6:.0f},{derived}")
+    with open("BENCH_search.json", "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print("wrote BENCH_search.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ MODULES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("train_step", "benchmarks.bench_train_step"),
     ("graph_block", "benchmarks.bench_graph_block"),
+    ("search", "benchmarks.bench_search"),
 ]
 
 

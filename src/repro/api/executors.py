@@ -38,6 +38,7 @@ them with one shared reduction rule.
 
 from __future__ import annotations
 
+import time
 from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -85,14 +86,37 @@ def _check_fetches(compiled: CompiledPlan, fetches) -> list[str]:
 
 
 class SimulatorExecutor:
-    """Numpy interpretation of the specialized per-device programs."""
+    """Numpy interpretation of the specialized per-device programs.
+
+    ``record_ticks=True`` makes :meth:`run_schedule` keep COMPUTE
+    wall-clock timings per (virtual stage, phase) tick, split BY
+    DEVICE — the simulator serializes all devices onto one CPU, so its
+    total wall time is pipeline-shape-blind; the per-tick max over
+    devices is the parallel makespan contribution the search validator
+    re-prices a timetable with (``last_tick_device_seconds``).  Comm
+    ops are excluded: their simulator cost is python shard-shuffling,
+    not network time."""
 
     name = "sim"
 
+    def __init__(self, record_ticks: bool = False):
+        self.record_ticks = record_ticks
+        # (stage, phase) -> one {device: [per-op seconds]} dict per
+        # executed tick; a device's op order within a (stage, phase) is
+        # deterministic, so samples from different microbatches/repeats
+        # align element-wise (the validator min-reduces per op)
+        self.last_tick_device_seconds: dict[
+            tuple[int, str], list[dict[int, list[float]]]] = {}
+
     def _exec_op(self, op, env: dict[str, ShardedTensor],
-                 compiled: CompiledPlan, plans: dict) -> None:
+                 compiled: CompiledPlan, plans: dict,
+                 dev_acc: dict[int, list[float]] | None = None) -> None:
         out_t = op.outputs[0]
         if op.kind == "comm":
+            # never timed into dev_acc: the simulator's comm cost is
+            # python shard-shuffling overhead, not network time — the
+            # recorded makespan is COMPUTE-only (comm is priced
+            # analytically by the cost model)
             env[out_t.name] = apply_plan(env[op.inputs[0].name],
                                          plans[id(op)])
             return
@@ -103,11 +127,15 @@ class SimulatorExecutor:
                              [env[t.name].dtype for t in op.inputs])
         parts: dict[int, np.ndarray] = {}
         for dev in annot.devices:
+            t0 = time.perf_counter() if dev_acc is not None else 0.0
             locs = [env[t.name].parts[dev] for t in op.inputs]
             out_local = tuple(annot.device_shape(dev, out_shape))
             parts[dev] = np.asarray(local_apply(
                 op.kind, np, locs, op.attrs, out_local)).astype(
                 dtype, copy=False)
+            if dev_acc is not None:
+                dev_acc.setdefault(dev, []).append(
+                    time.perf_counter() - t0)
         env[out_t.name] = ShardedTensor(out_shape, annot, parts)
 
     def _leaf_env(self, compiled: CompiledPlan,
@@ -176,17 +204,25 @@ class SimulatorExecutor:
                 (stage_of[id(op)], phase), []).append(op)
         envs = [self._leaf_env(compiled, st) for st in states]
         ran = [0] * len(states)
+        if self.record_ticks:
+            self.last_tick_device_seconds = {}
         for tick in schedule.ticks:          # already (slot, stage) sorted
             env = envs[tick.microbatch]
-            for op in ops_by_phase.get((tick.stage, tick.phase), ()):
+            ops = ops_by_phase.get((tick.stage, tick.phase), ())
+            dev_acc: dict[int, list[float]] | None = \
+                {} if (self.record_ticks and ops) else None
+            for op in ops:
                 try:
-                    self._exec_op(op, env, compiled, plans)
+                    self._exec_op(op, env, compiled, plans, dev_acc)
                 except KeyError as e:
                     raise ScheduleError(
                         f"stage {tick.stage} ({tick.phase}) ran before "
                         f"its input {e} was produced (invalid "
                         f"schedule)") from None
                 ran[tick.microbatch] += 1
+            if dev_acc is not None:
+                self.last_tick_device_seconds.setdefault(
+                    (tick.stage, tick.phase), []).append(dev_acc)
         n_ops = sum(len(v) for v in ops_by_phase.values())
         if any(r != n_ops for r in ran):
             raise ScheduleError(
@@ -262,11 +298,7 @@ def get_executor(name: str, **kwargs) -> Executor:
     string form used by CLI flags and old call sites).  Unknown options
     raise ``TypeError`` instead of vanishing silently."""
     if name == "sim":
-        if kwargs:
-            raise TypeError(
-                f"SimulatorExecutor takes no options; got "
-                f"{sorted(kwargs)}")
-        return SimulatorExecutor()
+        return SimulatorExecutor(**kwargs)  # unknown kwargs raise TypeError
     if name == "jax":
         return JaxExecutor(**kwargs)  # unknown kwargs raise TypeError
     raise ValueError(f"unknown executor {name!r} (have: sim, jax)")

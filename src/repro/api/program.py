@@ -154,6 +154,25 @@ class CompiledPlan:
             self.specialization.pipelines,
             self.virtual_stages_per_device, self.shapes)
 
+    def predicted_step_seconds(self, num_microbatches: int,
+                               kind: str = "1f1b", *,
+                               flops_per_second: float = 1e12,
+                               virtual_stages_per_device: int | None = None
+                               ) -> float:
+        """Makespan of this plan's own timetable under its MEASURED
+        per-tick durations: ``schedule(m).stats(tick_durations())`` — the
+        plan-level prediction the search subsystem compares against
+        executed step times (scale-free up to ``flops_per_second``)."""
+        v = virtual_stages_per_device
+        if v is None:
+            v = self.virtual_stages_per_device if kind == "interleaved" \
+                else 1
+        sched = self.schedule(num_microbatches, kind,
+                              virtual_stages_per_device=v)
+        durations = self.tick_durations(flops_per_second,
+                                        virtual_stages_per_device=v)
+        return sched.stats(durations).makespan
+
     @property
     def comm_plans(self) -> list[CommPlan]:
         return [rc.plan for rc in self.specialization.resolved]

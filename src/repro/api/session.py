@@ -11,6 +11,8 @@ bytes over fast/slow links, planning + estimated transfer time).
 
 from __future__ import annotations
 
+import statistics
+import time
 from dataclasses import dataclass
 from typing import Mapping, Sequence
 
@@ -79,6 +81,19 @@ class RunResult:
 
     def values(self) -> dict[str, np.ndarray]:
         return {name: self.value(name) for name in self.outputs}
+
+
+@dataclass
+class MeasuredStep:
+    """A timed :meth:`Session.measure_train_step` outcome."""
+
+    seconds: float                   # median wall time per step
+    result: TrainResult              # first measured step
+    # per-(stage, phase) tick timings, one {device: [per-op seconds]}
+    # per executed tick, pooled across repeats (None unless the
+    # executor records ticks)
+    tick_device_seconds: dict[tuple[int, str],
+                              list[dict[int, list[float]]]] | None = None
 
 
 class Session:
@@ -312,6 +327,38 @@ class Session:
         extra = {f: outs[f] for f in fetches}
         return TrainResult(loss_value, grads, metrics, schedule=sched,
                            outputs=extra)
+
+    def measure_train_step(self, feeds: Mapping[str, object] | None = None,
+                           *, repeats: int = 3, warmup: int = 1,
+                           **train_kw) -> "MeasuredStep":
+        """Run :meth:`train_step` ``warmup + repeats`` times and report
+        the median wall seconds of the measured calls, plus — when the
+        executor records per-tick device timings
+        (``SimulatorExecutor(record_ticks=True)``) — the per-(stage,
+        phase) tick timings pooled across repeats, which the search
+        validator re-prices into a parallel makespan.  Weights DO
+        advance (each call is a real optimizer step); ``result`` is the
+        first measured step's :class:`TrainResult`."""
+        walls: list[float] = []
+        ticks: dict[tuple[int, str], list[dict[int, float]]] = {}
+        result: TrainResult | None = None
+        for i in range(warmup + repeats):
+            t0 = time.perf_counter()
+            r = self.train_step(feeds, **train_kw)
+            dt = time.perf_counter() - t0
+            if i < warmup:
+                continue
+            walls.append(dt)
+            if result is None:
+                result = r
+            rec = getattr(self.executor, "last_tick_device_seconds",
+                          None)
+            if rec:
+                for key, occurrences in rec.items():
+                    ticks.setdefault(key, []).extend(occurrences)
+        assert result is not None  # repeats >= 1
+        return MeasuredStep(statistics.median(walls), result,
+                            ticks or None)
 
     def _leaf_state(self, feeds: dict) -> dict[str, ShardedTensor]:
         state: dict[str, ShardedTensor] = {}

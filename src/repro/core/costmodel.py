@@ -401,10 +401,22 @@ def dp_sync_time(cluster: ClusterSpec, model: ModelSpec,
 
 
 def step_time(cluster: ClusterSpec, model: ModelSpec, strat: Strategy,
-              seq_len: int) -> float:
-    t_pipe = max(pipeline_time(cluster, model, p, seq_len,
-                               kind=strat.schedule)
-                 for p in strat.pipelines)
+              seq_len: int, *, virtual_stages_per_device: int = 1,
+              fwd_fraction: float | None = None) -> float:
+    """One training step: slowest pipeline + cross-pipeline grad sync.
+
+    ``fwd_fraction`` (the candidate-facing pricing hook used by the
+    search subsystem) re-splits each tick's fwd/bwd durations by a
+    measured ratio instead of the analytic :data:`FWD_TIME_FRACTION`;
+    ``virtual_stages_per_device > 1`` prices the interleaved timetable.
+    """
+    kind = ("interleaved" if virtual_stages_per_device > 1
+            else strat.schedule)
+    t_pipe = max(pipeline_time(
+        cluster, model, p, seq_len, kind=kind,
+        virtual_stages_per_device=virtual_stages_per_device,
+        fwd_fraction=fwd_fraction)
+        for p in strat.pipelines)
     return t_pipe + dp_sync_time(cluster, model, strat)
 
 

@@ -46,13 +46,17 @@ def make_batch(corpus, cfg, batch, seq, rng):
     return out
 
 
-def strategy_report(params, mesh, num_microbatches: int = 1) -> None:
+def strategy_report(params, mesh, num_microbatches: int = 1,
+                    cfg=None, global_batch: int = 8,
+                    seq_len: int = 256) -> None:
     """Describe the run's weight placement through ``repro.api``: the
     FSDP-style strategy over the mesh devices, the pipeline schedule the
     microbatch count implies (grad accumulation is the single-stage 1F1B
-    case), plus the fused-BSR cost of draining to half the cluster (the
+    case), the fused-BSR cost of draining to half the cluster (the
     elastic-training transition this driver would pay on a node
-    failure)."""
+    failure), and — with ``cfg`` — the automated strategy search's pick
+    for this device count (``repro.search``: enumerate -> prune ->
+    rank)."""
     import jax.tree_util as jtu
 
     from repro import api
@@ -83,6 +87,24 @@ def strategy_report(params, mesh, num_microbatches: int = 1) -> None:
              for n in shapes])
         print(f"elastic drain to {len(devices) // 2} device(s): "
               f"{report.summary()}")
+    if cfg is not None:
+        from repro.core.costmodel import ModelSpec
+        from repro.search import SearchError, Searcher, cpu_cluster
+        spec = ModelSpec(cfg.name, cfg.n_layers, cfg.d_model,
+                         getattr(cfg, "d_ff", 4 * cfg.d_model),
+                         vocab=cfg.vocab)
+        searcher = Searcher(spec, global_batch=global_batch,
+                            seq_len=seq_len, tp_options=(1, 2),
+                            pp_options=(1, 2, 4),
+                            include_hetero=len(devices) > 1)
+        try:
+            result = searcher.search(cpu_cluster(len(devices)))
+            print(f"strategy search over {len(devices)} device(s): "
+                  f"{result.prune_report.summary()}")
+            print(f"  winner {result.best.describe()}")
+        except SearchError as exc:
+            print(f"strategy search over {len(devices)} device(s): "
+                  f"{exc}")
 
 
 def main():
@@ -113,7 +135,9 @@ def main():
     mesh = make_smoke_mesh()
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.strategy_report:
-        strategy_report(params, mesh, num_microbatches=args.microbatches)
+        strategy_report(params, mesh, num_microbatches=args.microbatches,
+                        cfg=cfg, global_batch=args.batch,
+                        seq_len=args.seq)
     opt_state = init_opt_state(params)
     start = 0
     if args.resume:

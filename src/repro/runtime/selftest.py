@@ -13,8 +13,10 @@ paper's Fig 9 heterogeneous multi-step stage, resharding round-trips, the
 dynamic-switch weight migration through the fused-BSR path on the jax
 backend, the microbatched pipeline schedules (``api:pipeline/*``:
 1F1B/GPipe over 2 stages, and ``api:pipeline/interleaved*``: Megatron's
-v=2 virtual-stage schedule over a zigzag plan), all bit-exact sim vs
-jax.  Emits one machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
+v=2 virtual-stage schedule over a zigzag plan), and the automated
+strategy search's execution validation (``repro.search`` top-3 on a
+hetero CPU fixture), all bit-exact sim vs jax.  Emits one
+machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
 (consumed by ``tests/test_runtime.py``).
 """
 
@@ -576,6 +578,37 @@ def run_all(max_devices: int = 8) -> dict:
         return {"loss": want_loss, "grad_comms": plan_kinds}
     if 4 in meshes:
         record("api:train/hetero4", train_hetero_case)
+
+    # 7f. automated strategy search, execution-validated: the searcher
+    #     enumerates/prunes/ranks candidates for a 2-fast + 2-slow CPU
+    #     fixture, executes the top-3 as proxy TRAINING programs on both
+    #     executors (losses + gradients bit-exact sim vs jax), and the
+    #     speed-projected measured-makespan ordering must agree with the
+    #     cost model's (at most one discordant pair tolerated — the
+    #     makespans come from wall-clock op timings)
+    def search_case():
+        from repro.search import Searcher, cpu_hetero_cluster, tiny_spec
+
+        searcher = Searcher(tiny_spec(), global_batch=8, seq_len=128,
+                            tp_options=(1,), pp_options=(1, 2),
+                            pipeline_options=(1, 2), virtual_options=(1,))
+        result = searcher.search(cpu_hetero_cluster(2, 2), validate_top=3,
+                                 executors=("sim", "jax"), mesh=meshes[4],
+                                 repeats=5, batch=64, d=64, f=128)
+        val = result.validation
+        assert val is not None and val.speed_projected
+        execed = [e for e in val.executed if e.error is None]
+        assert len(execed) == 3, [e.describe() for e in val.executed]
+        assert all(e.bit_exact for e in execed), \
+            [e.describe() for e in execed]
+        ag = val.agreement()
+        assert ag is not None and ag >= 2 / 3, val.summary()
+        best = result.best.candidate
+        assert best.kind == "hetero", best.describe()
+        return {"winner": best.name, "agreement": ag,
+                "prune": result.prune_report.counts()}
+    if 4 in meshes:
+        record("search:hetero/4", search_case)
 
     # 8. axis_index_groups subgroup reduces: a SplitAR plan lowers its
     #    cross-subgroup reduce groups onto grouped collectives (the kind

@@ -96,9 +96,22 @@ def two_pipeline_strategy(ranks: list[int], model: ModelSpec,
 
 def run_trace(trace, cluster: ClusterSpec, model: ModelSpec = LLAMA_32B,
               global_batch: int = 64, seq_len: int = 4096,
-              mode: str = "fused") -> list[TransitionReport]:
-    """Simulate the trace; returns per-config step time + transition cost."""
+              mode: str = "fused", pricing: str = "analytic",
+              searcher=None) -> list[TransitionReport]:
+    """Simulate the trace; returns per-config step time + transition cost.
+
+    ``pricing="analytic"`` (the fast default) keeps the 1:2 fwd:bwd
+    split; ``pricing="measured"`` prices step times with the fwd share
+    of a differentiated ``compile_train`` proxy plan (memoized in
+    :mod:`repro.search.rank`).  With a :class:`repro.search.Searcher`
+    the per-config strategy is re-SELECTED against the surviving ranks
+    (``searcher.select``, restart-free — ROADMAP item 3) with the
+    hand-written two-pipeline layout competing as an ``extras`` entry;
+    otherwise the fixture layout is used directly as before."""
     from repro.core.specialize import resolve_comm_ops  # noqa: F401
+    from repro.search.rank import resolve_fwd_fraction
+    frac = resolve_fwd_fraction(
+        "measured" if pricing == "measured" else None)
     topo = NvlinkIbTopology(
         gpus_per_node=8,
         node_nvlink_gbps={n: (400.0 if cluster.ranks[n * 8].name == "H800"
@@ -107,8 +120,14 @@ def run_trace(trace, cluster: ClusterSpec, model: ModelSpec = LLAMA_32B,
     reports = []
     prev_strat = None
     for name, ranks in trace:
-        strat = two_pipeline_strategy(ranks, model, global_batch)
-        t_step = step_time(cluster, model, strat, seq_len)
+        fixture = two_pipeline_strategy(ranks, model, global_batch)
+        if searcher is not None:
+            strat = searcher.select(cluster, list(ranks),
+                                    extras=(fixture,))
+        else:
+            strat = fixture
+        t_step = step_time(cluster, model, strat, seq_len,
+                           fwd_fraction=frac)
         rep = TransitionReport(name, t_step)
         if prev_strat is not None:
             # specialization cost: measured wall time of planning every

@@ -64,22 +64,31 @@ HETU_STRATEGIES = {
 
 
 def priced_schedule_stats(cluster: ClusterSpec, model: ModelSpec,
-                          strat: Strategy, seq_len: int):
+                          strat: Strategy, seq_len: int,
+                          fwd_fraction: float | str | None = None):
     """Per-pipeline :class:`~repro.core.schedule.ScheduleStats` of the
     timetables this strategy would execute, with tick durations priced
     from the cost model per (stage, phase) — the paper's temporal
     heterogeneity (§5, §7) made visible: the H20 stages' shorter layer
     ranges yield shorter ticks, and the *priced* makespan / bubble
     fraction reflect the actual (non-uniform) fill/drain shape rather
-    than bottleneck-uniform slot counts."""
+    than bottleneck-uniform slot counts.
+
+    ``fwd_fraction`` controls the fwd:bwd tick split: ``None`` (the
+    fast default) keeps the analytic 1:2 ratio; ``"measured"`` prices
+    with the fwd share of a differentiated ``compile_train`` proxy plan
+    (:func:`repro.search.rank.proxy_fwd_fraction`, memoized); a float
+    passes through."""
     from repro.core.costmodel import pipeline_tick_durations
     from repro.core.schedule import build_schedule
+    from repro.search.rank import resolve_fwd_fraction
 
+    frac = resolve_fwd_fraction(fwd_fraction)
     out = []
     for p in strat.pipelines:
         sched = build_schedule(len(p.stages), p.n_micro, strat.schedule)
-        out.append(sched.stats(
-            pipeline_tick_durations(cluster, model, p, seq_len)))
+        out.append(sched.stats(pipeline_tick_durations(
+            cluster, model, p, seq_len, fwd_fraction=frac)))
     return out
 
 

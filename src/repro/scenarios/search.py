@@ -2,41 +2,26 @@
 
 The paper (§7.2) selects strategies from "pre-profiled results combined
 with a cost model"; related work (Metis, HexiScale) searches the hetero
-strategy space.  HSPMD's role is to EXPRESS whatever a search finds —
-this module provides a compact searcher so the scenarios do not depend on
-hand-written fixtures alone:
-
-  1. partition the ranks into device-type groups (H800 vs H20);
-  2. enumerate pipeline counts / TP degrees per group (powers of two);
-  3. assign stage layer counts proportionally to stage compute power
-     (balanced-makespan heuristic, the paper's Table 5 shape);
-  4. keep the feasible strategy with the best cost-model step time.
+strategy space.  This module is now a thin compatibility shim over the
+:mod:`repro.search` subsystem (enumerate -> prune -> rank -> validate):
+the old entry points keep their signatures, but enumeration and pruning
+live in :mod:`repro.search.space` / :mod:`repro.search.prune`, and an
+infeasible search raises :class:`repro.search.SearchError` (a
+``RuntimeError`` subclass) carrying per-rule rejection counts instead
+of a bare message.
 """
 
 from __future__ import annotations
 
-import itertools
+from repro.core.costmodel import ClusterSpec, ModelSpec, Strategy
+from repro.search.prune import PruneReport, SearchError, prune
+from repro.search.rank import rank
+from repro.search.space import balanced_stages, enumerate_candidates
 
-from repro.core.costmodel import (ClusterSpec, ModelSpec, PipelineSpec,
-                                  Stage, Strategy, feasible, step_time)
-
-
-def _balanced_stages(groups: list[tuple[tuple[int, ...], float]],
-                     n_layers: int) -> list[Stage]:
-    """Assign layers to TP groups proportionally to group throughput."""
-    total = sum(p for _, p in groups)
-    stages, lo = [], 0
-    for i, (ranks, power) in enumerate(groups):
-        hi = n_layers if i == len(groups) - 1 else min(
-            n_layers, lo + max(1, round(n_layers * power / total)))
-        if hi <= lo:
-            hi = min(n_layers, lo + 1)
-        stages.append(Stage(tuple(ranks), (lo, hi)))
-        lo = hi
-    if lo != n_layers:
-        last = stages[-1]
-        stages[-1] = Stage(last.ranks, (last.layers[0], n_layers))
-    return stages
+# The old private helper had an off-by-one that could emit zero-layer
+# stages when the group count approached the layer count; it is now an
+# alias of the fixed implementation (every stage gets >= 1 layer).
+_balanced_stages = balanced_stages
 
 
 def search_hetero_strategy(cluster: ClusterSpec, model: ModelSpec,
@@ -44,53 +29,35 @@ def search_hetero_strategy(cluster: ClusterSpec, model: ModelSpec,
                            seq_len: int,
                            n_pipelines_options=(1, 2, 4),
                            tp_options=(2, 4, 8, 16)) -> tuple[Strategy, float]:
-    """Best hetero strategy found; raises if nothing is feasible."""
-    by_type: dict[str, list[int]] = {}
-    for r in ranks:
-        by_type.setdefault(cluster.ranks[r].name, []).append(r)
-
+    """Best hetero strategy found; raises :class:`SearchError` (a
+    ``RuntimeError``) with per-rule rejection counts if nothing is
+    feasible.  Kept signature-compatible with the pre-subsystem
+    searcher: ``n_micro = max(global_batch // n_pipelines, 1)`` and the
+    analytic fwd/bwd split (so returned times stay comparable to
+    ``best_uniform``'s ``step_time``)."""
     best: tuple[Strategy, float] | None = None
-    for n_pipes in n_pipelines_options:
-        if any(len(v) % n_pipes for v in by_type.values()):
+    n_cands, rejections = 0, []
+    for n_pipes in sorted(n_pipelines_options):
+        # the old searcher tolerated non-divisible global batches by
+        # rounding the per-pipeline microbatch count up to >= 1
+        gb = n_pipes * max(global_batch // n_pipes, 1)
+        cands = enumerate_candidates(
+            cluster, model, list(ranks), global_batch=gb,
+            tp_options=tp_options, pipeline_options=(n_pipes,),
+            include_uniform=False)
+        report = prune(cluster, model, cands)
+        n_cands += report.n_candidates
+        rejections.extend(report.rejections)
+        if not report.survivors:
             continue
-        per_pipe = {t: [v[i::n_pipes] for i in range(n_pipes)]
-                    for t, v in by_type.items()}
-        for tps in itertools.product(tp_options, repeat=len(by_type)):
-            pipes = []
-            ok = True
-            for pi in range(n_pipes):
-                groups = []
-                for (t, chunks), tp in zip(sorted(per_pipe.items()), tps):
-                    chunk = chunks[pi]
-                    if len(chunk) % tp:
-                        ok = False
-                        break
-                    power_per = cluster.ranks[chunk[0]].tflops * tp
-                    # slower device class feeds the early stages (paper
-                    # Table 5 places H20 stages first)
-                    for g in range(len(chunk) // tp):
-                        groups.append((tuple(chunk[g * tp:(g + 1) * tp]),
-                                       power_per))
-                if not ok or not groups:
-                    ok = False
-                    break
-                groups.sort(key=lambda g: g[1])  # slow stages first
-                if len(groups) > model.n_layers:
-                    ok = False
-                    break
-                stages = _balanced_stages(groups, model.n_layers)
-                n_micro = max(global_batch // n_pipes, 1)
-                pipes.append(PipelineSpec(tuple(stages), n_micro, 1))
-            if not ok:
-                continue
-            strat = Strategy(tuple(pipes))
-            if not feasible(cluster, model, strat):
-                continue
-            t = step_time(cluster, model, strat, seq_len)
-            if best is None or t < best[1]:
-                best = (strat, t)
+        top = rank(cluster, model, report.survivors, seq_len,
+                   fwd_fraction=None)[0]
+        if best is None or top.predicted_step_s < best[1]:
+            best = (top.candidate.strategy, top.predicted_step_s)
     if best is None:
-        raise RuntimeError("no feasible heterogeneous strategy found")
+        raise SearchError(
+            PruneReport(n_cands, (), tuple(rejections)),
+            "heterogeneous strategy")
     return best
 
 

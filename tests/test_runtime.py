@@ -115,6 +115,16 @@ def test_api_interleaved_schedule_parity(report, ndev):
     assert 0.0 <= case["bubble_fraction"] < 1.0
 
 
+def test_search_validation_bit_exact_and_concordant(report):
+    """The automated strategy search's execution validation: the top-3
+    candidates for the 2-fast + 2-slow CPU fixture train bit-exact sim
+    vs jax, the winner is a heterogeneous (hsize>1) candidate, and the
+    speed-projected measured ordering agrees with the cost model's."""
+    case = _case(report, "search:hetero/4")
+    assert case["winner"].startswith("het"), case
+    assert case["agreement"] >= 2 / 3, case
+
+
 def test_grouped_reduce_collectives(report):
     """Reduce groups lower onto axis_index_groups subgroup collectives
     (SplitAR's cross-subgroup groups), bit-exact vs the simulator."""
