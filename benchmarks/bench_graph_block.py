@@ -7,7 +7,13 @@ shard_map backend, against the unsharded plain-jax ``models.layers``
 reference (jit'd ``jax.value_and_grad``), per reduced config.  The
 ref-vs-pallas attention dispatch tallies of the lowered plan ride along
 (``LoweringStats``; see docs/kernels.md), so the JSON records what the
-compute seam actually dispatched.  Emits ``BENCH_graph_block.json``::
+compute seam actually dispatched — as do the specialization-class
+emission counts (``switch_branches_emitted`` etc.; docs/lowering.md)
+and the graph-jax/plain-jax steps/s ratio, so the structural claim
+(homogeneous strategies lower switch-free) stays measured.  ``--smoke``
+asserts the homogeneous dp2tp2 case really is at the straight-line
+minimum: zero switch branches, every segment straight-line.  Emits
+``BENCH_graph_block.json``::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m benchmarks.bench_graph_block [--smoke]
@@ -156,9 +162,30 @@ def bench(smoke: bool = False) -> dict:
                 max(warmup, 1), iters),
             "loss_step0": float(want),
         }
+        if "graph_jax" in case:
+            case["graph_jax"]["vs_plain_jax"] = (
+                case["graph_jax"]["steps_per_second"]
+                / case["plain_jax"]["steps_per_second"])
         if "jax" in executors:
-            case["dispatches"] = _dispatch_stats(
-                prog, prog.compile_train(0, loss="loss"))
+            tplan = prog.compile_train(0, loss="loss")
+            case["dispatches"] = _dispatch_stats(prog, tplan)
+            lw = api.JaxExecutor().lowered(tplan, None)
+            case["lowering"] = {
+                "compute_segments": lw.stats.compute_segments,
+                "straightline_segments": lw.stats.straightline_segments,
+                "switch_branches_emitted":
+                    lw.stats.switch_branches_emitted,
+            }
+            homogeneous = par["pp"] == 1
+            if smoke and homogeneous:
+                # the CI liveness gate for the specialization-class
+                # lowering: a homogeneous (single-class) strategy must
+                # emit NO switches at all — every segment straight-line
+                assert case["lowering"]["switch_branches_emitted"] == 0, \
+                    case["lowering"]
+                assert case["lowering"]["straightline_segments"] == \
+                    case["lowering"]["compute_segments"] > 0, \
+                    case["lowering"]
         out["cases"][label] = case
     return out
 
@@ -181,6 +208,13 @@ def rows(report: dict | None = None):
                         f"{disp['ref']['pallas']}pallas "
                         f"pallas_policy={disp['pallas']['ref']}ref+"
                         f"{disp['pallas']['pallas']}pallas"))
+        low = case.get("lowering")
+        if low:
+            out.append((f"graph_block/{label}/lowering", 0.0,
+                        f"segments={low['compute_segments']} "
+                        f"straightline={low['straightline_segments']} "
+                        f"switch_branches="
+                        f"{low['switch_branches_emitted']}"))
     return out
 
 
@@ -192,6 +226,9 @@ def main() -> None:
     report = bench(smoke=args.smoke)
     for name, seconds, derived in rows(report):
         print(f"{name},{seconds * 1e6:.0f},{derived}")
+    if args.smoke:
+        print("smoke ok (BENCH_graph_block.json left untouched)")
+        return
     with open("BENCH_graph_block.json", "w", encoding="utf-8") as fh:
         json.dump(report, fh, indent=2, sort_keys=True)
     print("wrote BENCH_graph_block.json")

@@ -25,11 +25,11 @@ def _configs(smoke: bool):
     from repro.search import cpu_cluster, cpu_hetero_cluster
 
     out = [("homog4", cpu_cluster(4),
-            dict(tp_options=(1,), pp_options=(1, 2, 4),
+            dict(tp_options=(1, 2), pp_options=(1, 2, 4),
                  virtual_options=(1, 2), include_hetero=False))]
     if not smoke:
         out.append(("hetero2x2", cpu_hetero_cluster(2, 2),
-                    dict(tp_options=(1,), pp_options=(1, 2),
+                    dict(tp_options=(1, 2), pp_options=(1, 2),
                          pipeline_options=(1, 2),
                          virtual_options=(1,))))
     return out

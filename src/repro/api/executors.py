@@ -43,7 +43,7 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.core.op_semantics import local_apply, result_dtype
+from repro.core.op_semantics import local_apply, result_dtype, stacked_apply
 from repro.core.schedule import PipelineSchedule, ScheduleError, assign_stages
 from repro.core.simulator import ShardedTensor, apply_plan
 
@@ -88,14 +88,27 @@ def _check_fetches(compiled: CompiledPlan, fetches) -> list[str]:
 class SimulatorExecutor:
     """Numpy interpretation of the specialized per-device programs.
 
+    Per-op dispatch is CLASS-vectorized (the simulator mirror of the
+    specialization-class lowering, ``core.lowered_ir``): devices whose
+    local input/output shard shapes agree are stacked and run through
+    ONE ``op_semantics.stacked_apply`` call instead of a per-device
+    python loop — bit-identical per shard, since the adapters only
+    re-index axes.  Kinds without a vectorized form (and singleton
+    classes) fall back to the per-device ``local_apply`` path.
+
     ``record_ticks=True`` makes :meth:`run_schedule` keep COMPUTE
     wall-clock timings per (virtual stage, phase) tick, split BY
     DEVICE — the simulator serializes all devices onto one CPU, so its
     total wall time is pipeline-shape-blind; the per-tick max over
     devices is the parallel makespan contribution the search validator
-    re-prices a timetable with (``last_tick_device_seconds``).  Comm
-    ops are excluded: their simulator cost is python shard-shuffling,
-    not network time."""
+    re-prices a timetable with (``last_tick_device_seconds``).  A
+    vectorized class is timed once and the elapsed time attributed as
+    ``dt / n_devices`` per device — the stacked call does each device's
+    work in one batched kernel, so the per-device share is the honest
+    parallel-cost proxy (this is what makes TP≥2 candidates measure
+    sanely instead of paying n× python dispatch).  Comm ops are
+    excluded: their simulator cost is python shard-shuffling, not
+    network time."""
 
     name = "sim"
 
@@ -125,17 +138,46 @@ class SimulatorExecutor:
         out_shape = compiled.shapes[out_t.name]
         dtype = result_dtype(op.kind,
                              [env[t.name].dtype for t in op.inputs])
-        parts: dict[int, np.ndarray] = {}
+        in_parts = [env[t.name].parts for t in op.inputs]
+        # specialization classes, computed from the shards themselves:
+        # devices with identical local input/output geometry share one
+        # vectorized application (core.lowered_ir's partition would give
+        # the same grouping — here the concrete shapes are already in
+        # hand, so group on those)
+        groups: dict[tuple, list[int]] = {}
         for dev in annot.devices:
-            t0 = time.perf_counter() if dev_acc is not None else 0.0
-            locs = [env[t.name].parts[dev] for t in op.inputs]
             out_local = tuple(annot.device_shape(dev, out_shape))
-            parts[dev] = np.asarray(local_apply(
-                op.kind, np, locs, op.attrs, out_local)).astype(
-                dtype, copy=False)
-            if dev_acc is not None:
-                dev_acc.setdefault(dev, []).append(
-                    time.perf_counter() - t0)
+            key = (tuple(tuple(p[dev].shape) for p in in_parts),
+                   out_local)
+            groups.setdefault(key, []).append(dev)
+        parts: dict[int, np.ndarray] = {}
+        for (_, out_local), devs in groups.items():
+            stacked = None
+            if len(devs) > 1:
+                t0 = time.perf_counter() if dev_acc is not None else 0.0
+                ins = [np.stack([p[d] for d in devs]) for p in in_parts]
+                stacked = stacked_apply(op.kind, np, ins, op.attrs,
+                                        out_local, len(devs))
+                if stacked is not None:
+                    stacked = np.asarray(stacked).astype(
+                        dtype, copy=False)
+                    dt = (time.perf_counter() - t0) / len(devs) \
+                        if dev_acc is not None else 0.0
+                    for j, dev in enumerate(devs):
+                        parts[dev] = stacked[j].copy()
+                        if dev_acc is not None:
+                            dev_acc.setdefault(dev, []).append(dt)
+            if stacked is None:   # singleton class or no vectorized form
+                for dev in devs:
+                    t0 = time.perf_counter() \
+                        if dev_acc is not None else 0.0
+                    locs = [p[dev] for p in in_parts]
+                    parts[dev] = np.asarray(local_apply(
+                        op.kind, np, locs, op.attrs, out_local)).astype(
+                        dtype, copy=False)
+                    if dev_acc is not None:
+                        dev_acc.setdefault(dev, []).append(
+                            time.perf_counter() - t0)
         env[out_t.name] = ShardedTensor(out_shape, annot, parts)
 
     def _leaf_env(self, compiled: CompiledPlan,

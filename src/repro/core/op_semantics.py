@@ -243,6 +243,121 @@ def local_apply(kind: str, xp, ins, attrs, out_shape):
     raise NotImplementedError(f"no local semantics for op kind {kind!r}")
 
 
+#: kinds whose local semantics are already pointwise / last-axis only,
+#: so the stacked (n, *local) call IS the per-shard call, bit for bit
+_STACK_TRANSPARENT = frozenset((
+    "gelu", "relu", "scale", "add", "mul", "silu", "rsqrt", "div",
+    "softmax", "gather", "relu_grad", "gelu_grad", "mul_grad",
+    "silu_grad", "softmax_grad", "gather_grad",
+))
+
+#: kinds that fold the class axis into the batch axis and call the
+#: plain local kernel once (batched einsums process each slice exactly
+#: as the unbatched call would)
+_STACK_BATCHFOLD = frozenset((
+    "attention", "attn_grad_q", "attn_grad_k", "attn_grad_v",
+))
+
+
+def stacked_apply(kind: str, xp, ins, attrs, out_shape, n: int):
+    """Apply ``kind`` to ``n`` same-shaped device shards at once.
+
+    Every input of ``ins`` is the class-stacked buffer ``(n, *local)``
+    (one row per device of a specialization class; ``core.lowered_ir``),
+    ``out_shape`` the per-device local output shape.  Returns the
+    stacked ``(n, *out_shape)`` result, or ``None`` when the kind has no
+    vectorized form — the caller then falls back to the per-device loop.
+
+    Bit-exactness contract: row ``j`` of the result must equal
+    ``local_apply(kind, xp, [x[j] for x in ins], attrs, out_shape)``
+    exactly.  Each adapter below only re-indexes axes (shifting them
+    past the stack axis, folding it into a batch dim, or replicating a
+    weight across rows); no reassociation of float reductions happens,
+    because numpy applies the same last-axis / contraction loops per
+    slice of a batched call.
+    """
+    if kind in _STACK_TRANSPARENT:
+        return local_apply(kind, xp, ins, attrs, out_shape)
+    if kind in _STACK_BATCHFOLD:
+        b = ins[0].shape[1]
+        folded = [xp.reshape(x, (-1,) + x.shape[2:]) for x in ins]
+        y = local_apply(kind, xp, folded, attrs, None)
+        return xp.reshape(y, (n, b) + y.shape[1:])
+    if kind == "dot":
+        a, b = ins
+        if a.ndim < 3 or b.ndim < 3:
+            return None           # 1-D operand: matmul semantics differ
+        if a.ndim > b.ndim:
+            b = xp.reshape(b, (n,) + (1,) * (a.ndim - b.ndim)
+                           + b.shape[1:])
+        elif b.ndim > a.ndim:
+            a = xp.reshape(a, (n,) + (1,) * (b.ndim - a.ndim)
+                           + a.shape[1:])
+        return xp.matmul(a, b)
+    if kind == "sum":
+        d = attrs["dim"]
+        return xp.sum(ins[0], axis=(d + 1 if d >= 0 else d))
+    if kind == "transpose":
+        return xp.transpose(ins[0],
+                            (0,) + tuple(p + 1 for p in attrs["perm"]))
+    if kind == "reshape":
+        return xp.reshape(ins[0], (n,) + tuple(out_shape))
+    if kind == "bcast":
+        d = attrs["dim"]
+        return xp.broadcast_to(
+            xp.expand_dims(ins[0], d + 1 if d >= 0 else d),
+            (n,) + tuple(out_shape))
+    if kind == "ones":
+        return xp.ones((n,) + tuple(out_shape))
+    if kind == "embedding":
+        table, ids = ins
+        rows = xp.arange(n)[:, None]
+        picked = table[rows, xp.reshape(ids, (n, -1))]
+        return xp.reshape(picked, (n,) + tuple(out_shape))
+    if kind == "embed_grad":
+        import numpy as _np
+        dy, ids = ins
+        d = dy.shape[-1]
+        dyf = xp.reshape(dy, (n, -1, d))
+        idf = xp.reshape(ids, (n, -1))
+        buf = xp.zeros((n,) + tuple(out_shape), dy.dtype)
+        _np.add.at(buf, (xp.arange(n)[:, None], idf), dyf)
+        return buf
+    if kind in ("rmsnorm", "layernorm"):
+        x, w = ins[0], ins[1]
+        wr = xp.reshape(w, (n,) + (1,) * (x.ndim - 2) + w.shape[1:])
+        xhat, _ = _norm_stats(xp, x, attrs)
+        y = xhat.astype(x.dtype) * wr
+        if kind == "layernorm":
+            y = y + xp.reshape(ins[2],
+                               (n,) + (1,) * (x.ndim - 2) + w.shape[1:])
+        return y
+    if kind == "norm_grad_x":
+        import numpy as np
+        dy, x, w = ins
+        wr = xp.reshape(w, (n,) + (1,) * (x.ndim - 2) + w.shape[1:])
+        xhat, r = _norm_stats(xp, x, attrs)
+        dxhat = (dy * wr).astype(np.float32)
+        d = np.float32(x.shape[-1])
+        if attrs.get("norm", "rms") == "layer":
+            return r * (dxhat
+                        - xp.mean(dxhat, axis=-1, keepdims=True)
+                        - xhat * xp.mean(dxhat * xhat, axis=-1,
+                                         keepdims=True))
+        return r * dxhat - (xhat * r) * xp.sum(
+            dxhat * xhat, axis=-1, keepdims=True) / d
+    if kind == "norm_grad_w":
+        import numpy as np
+        dy, x = ins
+        xhat, _ = _norm_stats(xp, x, attrs)
+        t = dy.astype(np.float32) * xhat
+        return xp.sum(xp.reshape(t, (n, -1, t.shape[-1])), axis=1)
+    if kind == "norm_grad_b":
+        dy = ins[0]
+        return xp.sum(xp.reshape(dy, (n, -1, dy.shape[-1])), axis=1)
+    return None
+
+
 # ---------------------------------------------------------------------------
 # microbatch role propagation (pipeline schedules, paper §5.4)
 # ---------------------------------------------------------------------------

@@ -6,12 +6,17 @@ RG-LRU scan) in the model layers onto the Pallas TPU kernels;
 the multi-pod dry-run lowers — Mosaic kernels target real TPUs).
 
 The graph-IR runtime consumes the same policy through
-:func:`select_attention_impl`: when ``runtime.program`` lowers an
-``attention`` ExecItem it asks this module — per device, with the
-device-LOCAL shard shapes — whether the Pallas flash kernel applies
+:func:`select_attention_impl_per_class`: when ``runtime.program`` lowers
+an ``attention`` op it asks this module — with the device-LOCAL shard
+shapes — whether the Pallas flash kernel applies
 (``kernels.flash_attention``) or the pure-XLA reference must run
-(``kernels.ref.flash_attention_ref``).  The decision is static per
-compiled program and is tallied in ``LoweringStats``.
+(``kernels.ref.flash_attention_ref``).  The decision is memoized per
+distinct (q, kv) shard-shape pair, so every device of a specialization
+class (``core.lowered_ir``) shares ONE decision and ONE emitted branch;
+it participates in the class partition (same shapes, different impl ⇒
+different classes — can't happen under one policy, but the seam is
+explicit).  The decision is static per compiled program and is tallied
+per emitted class in ``LoweringStats``.
 """
 
 from __future__ import annotations
@@ -28,6 +33,7 @@ def set_policy(policy: str) -> None:
             f"{', '.join(VALID_POLICIES)}")
     global _POLICY
     _POLICY = policy
+    _impl_cache.clear()
 
 
 def get_policy() -> str:
@@ -64,3 +70,19 @@ def select_attention_impl(q_shape, kv_shape) -> str:
     if use_pallas() and attention_eligible(q_shape, kv_shape):
         return "pallas"
     return "ref"
+
+
+#: (q_shape, kv_shape) -> impl; cleared on set_policy so a policy flip
+#: re-decides every class
+_impl_cache: dict[tuple, str] = {}
+
+
+def select_attention_impl_per_class(q_shape, kv_shape) -> str:
+    """Per-class dispatch: memoized :func:`select_attention_impl` over
+    distinct device-local (q, kv) shard-shape pairs, so all devices of a
+    specialization class resolve to the same kernel with one decision."""
+    key = (tuple(q_shape), tuple(kv_shape))
+    impl = _impl_cache.get(key)
+    if impl is None:
+        impl = _impl_cache[key] = select_attention_impl(*key)
+    return impl

@@ -93,25 +93,42 @@ class LoweringStats:
     ppermute_calls: int = 0  # batched permutes emitted after fusion
     reduce_groups: int = 0   # all_gather / psum launches
     grouped_reduces: int = 0  # of which run on axis_index_groups subgroups
+    uniform_reduce_stages: int = 0  # stages emitted switch-free + fused
+    uniform_copy_stages: int = 0    # ident/gather stages emitted switch-free
     stages: int = 0
-    ref_dispatches: int = 0     # compute items on the pure-XLA reference
-    pallas_dispatches: int = 0  # compute items on the Pallas kernels
+    ref_dispatches: int = 0     # attention classes on the XLA reference
+    pallas_dispatches: int = 0  # attention classes on the Pallas kernels
+    # specialization-class emission accounting (core.lowered_ir):
+    compute_segments: int = 0       # live compute segments emitted
+    straightline_segments: int = 0  # of which needed ZERO switches
+    switch_branches_emitted: int = 0  # total class (+idle) branches
 
     def merge(self, other: "LoweringStats") -> None:
         self.copy_pairs += other.copy_pairs
         self.ppermute_calls += other.ppermute_calls
         self.reduce_groups += other.reduce_groups
         self.grouped_reduces += other.grouped_reduces
+        self.uniform_reduce_stages += other.uniform_reduce_stages
+        self.uniform_copy_stages += other.uniform_copy_stages
         self.stages += other.stages
         self.ref_dispatches += other.ref_dispatches
         self.pallas_dispatches += other.pallas_dispatches
+        self.compute_segments += other.compute_segments
+        self.straightline_segments += other.straightline_segments
+        self.switch_branches_emitted += other.switch_branches_emitted
 
 
 def pack_shards(parts, annot: HSPMD, shape: tuple[int, ...], n_mesh: int,
-                order: DeviceOrder) -> np.ndarray:
+                order: DeviceOrder, out: "np.ndarray | None" = None
+                ) -> np.ndarray:
     """Stack per-device shards into the runtime's ``(n_mesh, *pad)``
     buffer (each device's box zero-padded at the origin), validating
-    every shard's shape against the annotation and promoting dtypes."""
+    every shard's shape against the annotation and promoting dtypes.
+
+    ``out`` may pass a buffer from a PREVIOUS pack of the same tensor
+    to fill in place (skips the zeroed allocation; the padding region
+    is never written, so it stays zero from the first pack).  It is
+    used only when its shape and dtype still match."""
     dtype = None
     for dev in annot.devices:
         arr = np.asarray(parts[dev])
@@ -122,7 +139,11 @@ def pack_shards(parts, annot: HSPMD, shape: tuple[int, ...], n_mesh: int,
                 f"expected by the annotation")
         dtype = arr.dtype if dtype is None else \
             np.promote_types(dtype, arr.dtype)
-    stacked = np.zeros((n_mesh,) + pad_shape(annot, shape), dtype=dtype)
+    full = (n_mesh,) + pad_shape(annot, shape)
+    if out is not None and out.shape == full and out.dtype == dtype:
+        stacked = out
+    else:
+        stacked = np.zeros(full, dtype=dtype)
     for dev in annot.devices:
         arr = np.asarray(parts[dev])
         stacked[(order.pos(dev),)
@@ -221,14 +242,29 @@ class PlanLowering:
         self.reduction = reduction
         self.stats = LoweringStats()
         self.has_reduce = any(g.reduce for s in plan.steps for g in s.groups)
+        # set while walking the groups below: exact mode only needs the
+        # float64 fold machinery for groups of MORE than two sources (a
+        # two-operand group's exact-fold-then-cast IS the native-dtype
+        # psum bitwise) or groups that cannot run on a psum subgroup
+        self.needs_x64 = False
 
         # static geometry per stage, verified up front; copy deliveries
         # fused into batched-permute rounds, reduce groups mapped onto
         # axis_index_groups subgroup collectives where possible
         self._stage_rounds: list[list[_Round]] = []
         self._reduce_partitions: dict[int, tuple] = {}
+        self._uniform_stages: list[dict | None] = []
         prev = plan.src
         for stage in plan.stages:
+            uni = self._uniform_stage_static(stage, prev) \
+                or self._uniform_ident_static(stage, prev) \
+                or self._uniform_gather_static(stage, prev)
+            self._uniform_stages.append(uni)
+            if uni is not None:
+                if uni["kind"] == "reduce":
+                    self.stats.uniform_reduce_stages += 1
+                else:
+                    self.stats.uniform_copy_stages += 1
             deliveries = [(g.box, g.dsts) for step in stage.steps
                           for g in step.groups]
             pairs = []
@@ -246,6 +282,8 @@ class PlanLowering:
                         self._reduce_partitions[id(g)] = part
                         if part[0 if reduction == "fast" else 1]:
                             self.stats.grouped_reduces += 1
+                        if len(g.srcs) > 2 or part[0] is None:
+                            self.needs_x64 = True
                         continue
                     src = g.srcs[0]
                     for d in g.dsts:
@@ -256,10 +294,265 @@ class PlanLowering:
                                  self.shape, kinds)
             rounds = _fuse_rounds(pairs)
             self._stage_rounds.append(rounds)
-            self.stats.copy_pairs += len(pairs)
-            self.stats.ppermute_calls += len(rounds)
+            if uni is None:    # uniform stages never emit the rounds
+                self.stats.copy_pairs += len(pairs)
+                self.stats.ppermute_calls += len(rounds)
             self.stats.stages += 1
             prev = stage.annot_after
+
+    def _uniform_stage_static(self, stage, prev) -> dict | None:
+        """Static descriptor of a *uniform reduce stage* — the symmetric
+        case where every mesh position plays the identical role, so the
+        stage lowers switch-free with ONE fused collective:
+
+        * every group is a reduce whose destinations equal its sources,
+        * the groups' source positions partition the whole mesh axis
+          into equal-size subgroups,
+        * every source extracts the same slice of its local padded
+          buffer (regular tilings make the extract position-invariant
+          in *local* coordinates even though the global boxes differ),
+        * every destination's next-annotation box is fully covered by
+          its group's box, at the same local offsets.
+
+        This is the comm-side analogue of the compute segments' single
+        specialization class: per-device ``lax.switch`` emission (and
+        one collective per group) collapses to straight-line code with
+        a single ``axis_index_groups`` collective for all groups.
+        Returns ``None`` when any condition fails (masked per-group
+        emission is kept as the general path)."""
+        groups = [g for step in stage.steps for g in step.groups]
+        if not groups or not all(g.reduce for g in groups):
+            return None
+        if any(set(g.dsts) != set(g.srcs) for g in groups):
+            return None
+        k = len(groups[0].srcs)
+        if any(len(g.srcs) != k for g in groups):
+            return None
+        pos_groups = [[self.order.pos(s) for s in g.srcs] for g in groups]
+        flat = sorted(p for ps in pos_groups for p in ps)
+        if flat != list(range(self.n_mesh)):
+            return None
+        gshape = box_shape(groups[0].box)
+        src_rel = None
+        for g in groups:
+            if box_shape(g.box) != gshape:
+                return None
+            for s in g.srcs:
+                r = rel_slices(prev.device_box(s, self.shape), g.box)
+                if src_rel is None:
+                    src_rel = r
+                elif r != src_rel:
+                    return None
+        nxt = stage.annot_after
+        if set(nxt.devices) != set(self.order.devices):
+            return None
+        dst_rel = piece_rel = nbox_shape = None
+        for g in groups:
+            for dev in g.dsts:
+                nbox = nxt.device_box(dev, self.shape)
+                inter = box_intersect(g.box, nbox)
+                if inter != nbox:   # piece must fully cover the dst box
+                    return None
+                d_r = rel_slices(nbox, inter)
+                p_r = rel_slices(g.box, inter)
+                bs = box_shape(nbox)
+                if dst_rel is None:
+                    dst_rel, piece_rel, nbox_shape = d_r, p_r, bs
+                elif (d_r, p_r, bs) != (dst_rel, piece_rel, nbox_shape):
+                    return None
+        return {"kind": "reduce", "src_rel": src_rel, "groups": pos_groups,
+                "k": k, "dst_rel": dst_rel, "piece_rel": piece_rel,
+                "next_pad": pad_shape(nxt, self.shape)}
+
+    @staticmethod
+    def _has_partial(annot) -> bool:
+        from repro.core.annotations import PARTIAL
+        return annot.hdim == PARTIAL or \
+            any(ds.has_partial for ds in annot.dss)
+
+    def _uniform_ident_static(self, stage, prev) -> dict | None:
+        """Static descriptor of a *uniform identity stage* — no
+        deliveries at all: every device re-slices data it already
+        holds, with the same local output shape everywhere.  Only the
+        slice OFFSETS vary per mesh position (DP slab selection, TP
+        column selection), so per-device ``lax.switch`` emission
+        collapses to one ``dynamic_slice`` driven by a position-indexed
+        offset table — zero branches, zero collectives.  Excludes
+        Partial layouts: a Partial shard is a summand, and re-slicing
+        summands is only meaningful through a reduce stage."""
+        if any(step.groups for step in stage.steps):
+            return None
+        if len(self.order) != self.n_mesh:
+            return None
+        nxt = stage.annot_after
+        if set(nxt.devices) != set(self.order.devices):
+            return None
+        if not set(self.order.devices) <= set(prev.devices):
+            return None
+        if self._has_partial(prev) or self._has_partial(nxt):
+            return None
+        out_shape = None
+        starts: list = [None] * self.n_mesh
+        for dev in self.order.devices:
+            pbox = prev.device_box(dev, self.shape)
+            nbox = nxt.device_box(dev, self.shape)
+            if box_intersect(pbox, nbox) != nbox:
+                return None      # output not locally available
+            bs = box_shape(nbox)
+            if out_shape is None:
+                out_shape = bs
+            elif bs != out_shape:
+                return None
+            r = rel_slices(pbox, nbox)
+            starts[self.order.pos(dev)] = tuple(s.start for s in r)
+        if out_shape != pad_shape(nxt, self.shape):
+            return None
+        return {"kind": "ident", "starts": starts, "out_shape": out_shape}
+
+    def _uniform_gather_static(self, stage, prev) -> dict | None:
+        """Static descriptor of a *uniform gather stage*: pure copy
+        deliveries where every device contributes its (identical-shape)
+        local shard and assembles its next box from ``k`` such pieces
+        at identical destination offsets — only WHICH positions supply
+        the pieces differs.  Lowers to a single full-axis
+        ``all_gather`` plus a position-indexed piece table: no
+        switches, no permute rounds.  Copies are exact, so the path is
+        valid under either reduction mode; sources with overlapping
+        boxes are interchangeable because replicated shards are bitwise
+        identical (Partial layouts, whose shards are summands, are
+        excluded)."""
+        groups = [g for step in stage.steps for g in step.groups]
+        if not groups or any(g.reduce for g in groups):
+            return None
+        if len(self.order) != self.n_mesh:
+            return None
+        nxt = stage.annot_after
+        if set(nxt.devices) != set(self.order.devices):
+            return None
+        if set(prev.devices) != set(self.order.devices):
+            return None
+        if self._has_partial(prev) or self._has_partial(nxt):
+            return None
+        pboxes = [prev.device_box(self.order.devices[p], self.shape)
+                  for p in range(self.n_mesh)]
+        piece_shape = box_shape(pboxes[0])
+        if any(box_shape(b) != piece_shape for b in pboxes):
+            return None
+        if piece_shape != pad_shape(prev, self.shape):
+            return None
+        next_pad = pad_shape(nxt, self.shape)
+        template: list | None = None   # (dst_rel, piece_rel, shape) per tile
+        picks: list = [None] * self.n_mesh
+        for dev in self.order.devices:
+            nbox = nxt.device_box(dev, self.shape)
+            if box_shape(nbox) != next_pad:
+                return None
+            tiles, seen = [], set()
+            for p in range(self.n_mesh):
+                ib = box_intersect(pboxes[p], nbox)
+                if ib is not None and ib not in seen:
+                    seen.add(ib)
+                    tiles.append(ib)
+            tiles.sort(key=lambda b: tuple(lo for lo, _ in b))
+            if sum(int(np.prod(box_shape(t))) for t in tiles) != \
+                    int(np.prod(next_pad)):
+                return None      # tiles must cover the dst box exactly...
+            for a in range(len(tiles)):
+                for b in range(a + 1, len(tiles)):
+                    if box_intersect(tiles[a], tiles[b]) is not None:
+                        return None   # ...without overlap
+            if template is None:
+                template = []
+                for t in tiles:
+                    p = next((p for p in range(self.n_mesh)
+                              if box_contains(pboxes[p], t)), None)
+                    if p is None:
+                        return None
+                    template.append((rel_slices(nbox, t),
+                                     rel_slices(pboxes[p], t),
+                                     box_shape(t)))
+            if len(tiles) != len(template):
+                return None
+            chosen = []
+            for t, (d_r, p_r, ts) in zip(tiles, template):
+                if rel_slices(nbox, t) != d_r or box_shape(t) != ts:
+                    return None
+                p = next((p for p in range(self.n_mesh)
+                          if box_contains(pboxes[p], t)
+                          and rel_slices(pboxes[p], t) == p_r), None)
+                if p is None:
+                    return None
+                chosen.append(p)
+            picks[self.order.pos(dev)] = chosen
+        return {"kind": "gather", "piece_shape": piece_shape,
+                "k": len(template),
+                "dst_rel": [t[0] for t in template],
+                "piece_rel": [t[1] for t in template],
+                "picks": picks, "next_pad": next_pad}
+
+    def _emit_uniform_ident(self, x, uni, i, out_dtype):
+        import jax
+        import jax.numpy as jnp
+
+        if all(not any(s) for s in uni["starts"]) and \
+                tuple(x.shape) == tuple(uni["out_shape"]):
+            return x.astype(out_dtype)      # pure no-op stage
+        st = jnp.asarray(uni["starts"], jnp.int32)[i]
+        y = jax.lax.dynamic_slice(
+            x, tuple(st[d] for d in range(len(uni["out_shape"]))),
+            uni["out_shape"])
+        return y.astype(out_dtype)
+
+    def _emit_uniform_gather(self, x, uni, i, out_dtype):
+        import jax
+        import jax.numpy as jnp
+
+        contrib = x[tuple(slice(0, n) for n in uni["piece_shape"])]
+        gathered = jax.lax.all_gather(contrib, self.axis)
+        picks = jnp.asarray(uni["picks"], jnp.int32)[i]
+        arr = jnp.zeros(uni["next_pad"], out_dtype)
+        for t in range(uni["k"]):
+            piece = gathered[picks[t]]
+            arr = arr.at[uni["dst_rel"][t]].set(
+                piece[uni["piece_rel"][t]].astype(out_dtype))
+        return arr
+
+    def _emit_uniform_stage(self, x, uni, out_dtype, i=None):
+        """Straight-line emission of a uniform stage: reduce stages get
+        one fused subgroup collective, ident/gather stages a
+        position-indexed slice / full-axis gather — never a switch.
+        Exact mode folds reduces in float64; for subgroups of <=2
+        sources a float64 ``psum`` IS the ordered fold bitwise
+        (two-operand IEEE addition is commutative), so the all_gather +
+        sequential fold is only kept for larger groups."""
+        import jax
+        import jax.numpy as jnp
+
+        if uni["kind"] == "ident":
+            return self._emit_uniform_ident(x, uni, i, out_dtype)
+        if uni["kind"] == "gather":
+            return self._emit_uniform_gather(x, uni, i, out_dtype)
+        contrib = x[uni["src_rel"]]
+        if self.reduction == "fast" or uni["k"] <= 2:
+            # exact for k<=2 without float64: the exact sum of two
+            # values fits in float64, so the ordered f64 fold cast back
+            # to the input dtype is the correctly-rounded two-operand
+            # sum — i.e. bitwise the native-dtype psum
+            if self.reduction != "fast":
+                assert jnp.dtype(out_dtype) == contrib.dtype, \
+                    "two-operand psum shortcut needs matching dtypes"
+            y = jax.lax.psum(contrib, self.axis,
+                             axis_index_groups=uni["groups"])
+        else:
+            gathered = jax.lax.all_gather(
+                contrib.astype(jnp.float64), self.axis,
+                axis_index_groups=uni["groups"])
+            y = gathered[0]
+            for j in range(1, uni["k"]):
+                y = y + gathered[j]
+        arr = jnp.zeros(uni["next_pad"], out_dtype)
+        return arr.at[uni["dst_rel"]].set(
+            y[uni["piece_rel"]].astype(out_dtype))
 
     def _reduce_groups_static(self, g) -> tuple[list | None, list | None]:
         """axis_index_groups partitions for one reduce group: the
@@ -351,6 +644,12 @@ class PlanLowering:
         if self.reduction == "fast":
             return jax.lax.psum(contrib, self.axis,
                                 axis_index_groups=psum_groups)
+        if psum_groups is not None and len(g.srcs) <= 2:
+            # native-dtype psum == the ordered f64 fold cast back,
+            # bitwise, for <=2 sources (two-operand addition is
+            # commutative and its exact sum fits in float64)
+            return jax.lax.psum(contrib, self.axis,
+                                axis_index_groups=psum_groups)
         if ag_groups is not None:
             # subgroup gather: position j within the group IS g.srcs[j],
             # so the float64 fold keeps the simulator's srcs order
@@ -408,7 +707,12 @@ class PlanLowering:
         shard at the origin); ``i`` is the traced mesh axis index."""
         out_dtype = out_dtype or x.dtype
         prev_annot = self.plan.src
-        for stage, rounds in zip(self.plan.stages, self._stage_rounds):
+        for stage, rounds, uni in zip(self.plan.stages, self._stage_rounds,
+                                      self._uniform_stages):
+            if uni is not None:
+                x = self._emit_uniform_stage(x, uni, out_dtype, i)
+                prev_annot = stage.annot_after
+                continue
             received = self._emit_rounds(x, rounds, prev_annot, i)
             pieces = []
             for step in stage.steps:
@@ -470,4 +774,4 @@ def lower_plan(plan: CommPlan, shape: tuple[int, ...], mesh,
     spec = P(axis, *([None] * rank))
     jitted = jax.jit(shard_map(body, mesh=mesh, in_specs=spec,
                                out_specs=spec, check_rep=False))
-    return maybe_x64(jitted, lowering.has_reduce and reduction == "exact")
+    return maybe_x64(jitted, lowering.needs_x64 and reduction == "exact")

@@ -6,24 +6,30 @@ every resolved CommOp — into ONE ``jax.shard_map`` program over a 1-D
 device mesh, so a progressively-specialized pipeline stage runs
 end-to-end on real devices (paper §5.3-5.4):
 
-* each tensor lives as a stacked ``(mesh, *padded_local)`` buffer whose
-  row ``order.pos(dev)`` holds device ``dev``'s local shard at the
-  origin (heterogeneous ``hsplits`` boxes are zero-padded to the
-  per-tensor elementwise-max box shape),
-* a compute op becomes a ``jax.lax.switch`` over ``axis_index`` whose
-  branches are the *per-device* local computations — each branch slices
-  its device's exact local input shapes, applies the shared local
-  semantics (``core.op_semantics.local_apply``), and re-pads.  A device
-  outside the op's output annotation gets a zero branch: non-local
-  operator removal, executed literally,
+* each tensor that crosses a communication boundary lives as a stacked
+  ``(mesh, *padded_local)`` buffer whose row ``order.pos(dev)`` holds
+  device ``dev``'s local shard at the origin (heterogeneous ``hsplits``
+  boxes are zero-padded to the per-tensor elementwise-max box shape),
+* compute ops are lowered through the **specialization-class IR**
+  (``core.lowered_ir``): maximal runs of compute ops between comm ops
+  form segments, and each segment emits ONE branch per *class* of
+  devices sharing the identical local program — in the common
+  homogeneous SPMD case (one class, every device) the whole segment is
+  straight-line unpadded code with zero switches; heterogeneous or
+  pipeline-staged segments get a small ``jax.lax.switch`` over classes
+  (never over devices), with a zero branch only when some mesh position
+  idles through the segment (non-local operator removal, executed
+  literally),
 * a CommOp applies its resolved plan's stages via
   :class:`~repro.runtime.lowering.PlanLowering` (fused batched permutes,
   exact or fast reductions) on the same buffers.
 
 The per-device programs are exactly the ExecItem lists progressive
-specialization produces (``core.specialize.specialize``); the
-SimulatorExecutor interprets the same items with numpy, which is what the
-differential tests compare against.
+specialization produces (``core.specialize.specialize``) — the class
+partition is their quotient, checked against them by
+``core.lowered_ir.check_against_exec_items`` — and the
+SimulatorExecutor interprets the same classes with vectorized numpy,
+which is what the differential tests compare against.
 
 Joint fwd+bwd TRAINING graphs (``Program.compile_train``) lower through
 the very same path: backward ops are ordinary graph ops (autodiff VJP
@@ -40,12 +46,13 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.core.lowered_ir import (CommSlot, Segment, partition_graph)
 from repro.core.op_semantics import local_apply, result_dtype
 from repro.core.simulator import ShardedTensor
 from repro.core.specialize import resolve_comm_ops
 from repro.core.symbolic import bind_shape
 from repro.core.topology import Topology
-from repro.kernels.policy import select_attention_impl
+from repro.kernels.policy import select_attention_impl_per_class
 
 from .lowering import (DeviceOrder, LoweringStats, PlanLowering, maybe_x64,
                        pack_shards, pad_shape)
@@ -58,7 +65,7 @@ class LoweredGraph:
     With ``num_microbatches=m > 1`` the SAME program additionally scans
     over a leading microbatch axis: placeholder buffers carry all ``m``
     microbatch shards stacked at axis 1, a ``jax.lax.scan`` runs the
-    per-device body (unchanged ``lax.switch`` branches + comm lowerings)
+    per-device body (unchanged segment emissions + comm lowerings)
     once per microbatch, and every fetch comes back per-microbatch — the
     pipeline schedule's work, expressed as one XLA program whose
     dependence order realizes the same 1F1B/GPipe overlap.  The graph
@@ -67,9 +74,9 @@ class LoweredGraph:
 
     Interleaved virtual stages (Megatron's ``v`` chunks per device;
     ``schedule.infer_virtual_stages``) need no special lowering: a
-    device holding ``v`` chunks simply contributes the ops of ALL its
-    chunks to its switch branch, and the wrap-around CommOps route
-    activations around the device ring ``v`` times inside the same
+    device holding ``v`` chunks simply belongs to the participant class
+    of every one of its chunks' segments, and the wrap-around CommOps
+    route activations around the device ring ``v`` times inside the same
     scanned body.  ``n_virtual_stages`` surfaces the deduced chunk
     structure (``n_stages * v``) for introspection — the explicit
     interleaved timetable remains the SimulatorExecutor's contract,
@@ -96,9 +103,13 @@ class LoweredGraph:
                        for name, t in graph.tensors.items()}
         resolved = resolve_comm_ops(graph, strategy, topology, shape_env)
         self._plans = {id(rc.op): rc.plan for rc in resolved}
+        # id -> op, built ONCE (plan lowering below used to re-scan
+        # graph.comm_ops per plan — an O(n^2) linear hunt)
+        self._comm_op_by_id = {id(op): op for op in graph.comm_ops}
         # kept for the lazy pipeline/chunk introspection properties
         self._resolved_comms = resolved
         self._pipelines: "list | None" = None
+        self._pack_bufs: dict[str, np.ndarray] = {}
 
         devs: set[int] = set()
         for t in graph.tensors.values():
@@ -131,81 +142,170 @@ class LoweredGraph:
 
         self.stats = LoweringStats()
         lowerings: dict[int, PlanLowering] = {}
-        has_reduce = False
-        for oid, plan in self._plans.items():
-            shape = self.shapes[plan_input_name(graph, oid)]
+        needs_x64 = False
+        for oid, op in self._comm_op_by_id.items():
+            plan = self._plans[oid]
+            shape = self.shapes[op.inputs[0].name]
             pl = PlanLowering(plan, shape, self.order, axis, self.n_mesh,
                               reduction=reduction)
             lowerings[oid] = pl
             self.stats.merge(pl.stats)
-            has_reduce |= pl.has_reduce
+            needs_x64 |= pl.needs_x64
 
-        # Kernel dispatch is decided STATICALLY, per (op, device), from the
-        # device-LOCAL shard shapes — a TP-split head dim can make a shard
-        # kernel-eligible (or not) independent of the global shape.  The
-        # jitted body is traced lazily, so the tally lives here, not in a
-        # trace-time hook.
-        self._attn_impl: dict[tuple[int, int], str] = {}
-        for op in graph.ops:
+        # Kernel dispatch is decided STATICALLY, per specialization
+        # class, from the device-LOCAL shard shapes — a TP-split head
+        # dim can make a shard kernel-eligible (or not) independent of
+        # the global shape.  Devices whose shard shapes agree share ONE
+        # decision (kernels.policy memoizes per distinct shape pair),
+        # and the decision participates in the class partition: same
+        # shapes but different impls would be different classes.
+        k, shapes = strategy, self.shapes
+
+        def impl_of(op, dev):
             if op.kind != "attention":
-                continue
-            annot = op.outputs[0].annots[strategy]
-            qa, ka = op.inputs[0].annots[strategy], op.inputs[1].annots[strategy]
-            qs = self.shapes[op.inputs[0].name]
-            ks = self.shapes[op.inputs[1].name]
-            for dev in annot.devices:
-                impl = select_attention_impl(
-                    tuple(qa.device_shape(dev, qs)),
-                    tuple(ka.device_shape(dev, ks)))
-                self._attn_impl[(id(op), dev)] = impl
-                if impl == "pallas":
-                    self.stats.pallas_dispatches += 1
-                else:
-                    self.stats.ref_dispatches += 1
+                return ""
+            qs = shapes[op.inputs[0].name]
+            ks = shapes[op.inputs[1].name]
+            return select_attention_impl_per_class(
+                tuple(op.inputs[0].annots[k].device_shape(dev, qs)),
+                tuple(op.inputs[1].annots[k].device_shape(dev, ks)))
 
-        k, order, n_mesh, shapes = strategy, self.order, self.n_mesh, \
-            self.shapes
+        self.ir = partition_graph(graph, strategy, shapes=shapes,
+                                  impl_of=impl_of,
+                                  devices=self.order.devices)
 
-        def emit_compute(op, ins, i):
+        # static per-segment liveness: values produced AND consumed
+        # inside one segment stay unpadded inside its branches; only
+        # live-outs materialize as stacked (mesh, *pad) buffers
+        consumers: dict[str, set[int]] = {}
+        for op in graph.ops:
+            for t in op.inputs:
+                consumers.setdefault(t.name, set()).add(id(op))
+        fetch_set = set(self.fetches)
+        self._seg_live: dict[int, tuple[list[str], list[str]]] = {}
+        for seg in self.ir.segments:
+            seg_ids = {id(op) for op in seg.ops}
+            produced: list[str] = [op.outputs[0].name for op in seg.ops]
+            produced_set = set(produced)
+            live_in: list[str] = []
+            for op in seg.ops:
+                for t in op.inputs:
+                    if t.name not in produced_set and \
+                            t.name not in live_in:
+                        live_in.append(t.name)
+            live_out = [n for n in produced
+                        if n in fetch_set
+                        or (consumers.get(n, set()) - seg_ids)]
+            self._seg_live[id(seg)] = (live_in, live_out)
+
+        # branch accounting: the structural win the benchmark records.
+        # A homogeneous segment (one class, every mesh position) is
+        # straight-line — zero switches; anything else emits one branch
+        # per class (+ one zero branch when some position idles).
+        extra_idle = self.n_mesh > len(self.order)
+        for seg in self.ir.segments:
+            if not self._seg_live[id(seg)][1]:
+                continue                    # dead segment: never emitted
+            self.stats.compute_segments += 1
+            if seg.is_homogeneous() and not extra_idle:
+                self.stats.straightline_segments += 1
+            else:
+                idle = 1 if (seg.idle_devices or extra_idle) else 0
+                self.stats.switch_branches_emitted += \
+                    seg.n_classes + idle
+            for cls in seg.classes:
+                for op, spec in zip(seg.ops, cls.specs):
+                    if op.kind == "attention" and spec is not None:
+                        if spec.impl == "pallas":
+                            self.stats.pallas_dispatches += 1
+                        else:
+                            self.stats.ref_dispatches += 1
+
+        order, n_mesh = self.order, self.n_mesh
+
+        def run_class(seg, cls, dtypes, live_in, live_out, out_pads, vs):
+            """Trace one class's local program over the segment: slice
+            live-ins to the class's exact local shapes once, keep every
+            interior value unpadded, re-pad only the live-outs."""
             import jax.numpy as jnp
-            out_t = op.outputs[0]
-            annot = out_t.annots[k]
-            out_shape = shapes[out_t.name]
-            out_pad = pad_shape(annot, out_shape)
-            # shared promotion rule, matching the SimulatorExecutor
-            dtype = result_dtype(op.kind, [np.dtype(v.dtype) for v in ins])
+            local = dict(zip(live_in, vs))
+            exact: dict[str, object] = {}
+            for op, spec in zip(seg.ops, cls.specs):
+                if spec is None:
+                    continue        # this class does not run the op
+                ins = []
+                for t, shp in zip(op.inputs, spec.in_shapes):
+                    v = exact.get(t.name)
+                    if v is None:
+                        v = local[t.name]
+                        if tuple(v.shape) != tuple(shp):
+                            v = v[tuple(slice(0, s) for s in shp)]
+                    ins.append(v)
+                name = op.outputs[0].name
+                if spec.impl == "pallas":
+                    from repro.kernels.ops import attention as attn_kernel
+                    y = attn_kernel(*ins,
+                                    causal=op.attrs.get("causal", True),
+                                    use_kernel="pallas")
+                else:
+                    y = local_apply(op.kind, jnp, ins, op.attrs,
+                                    spec.out_shape)
+                exact[name] = y.astype(dtypes[name])
+            outs = []
+            for name in live_out:
+                pad = out_pads[name]
+                y = exact.get(name)
+                if y is None:
+                    outs.append(jnp.zeros(pad, dtypes[name]))
+                elif tuple(y.shape) == pad:
+                    outs.append(y)
+                else:
+                    outs.append(jnp.zeros(pad, dtypes[name]).at[
+                        tuple(slice(0, s) for s in y.shape)].set(y))
+            return tuple(outs)
 
-            def branch_for(pos):
-                if pos >= len(order) or \
-                        order.devices[pos] not in annot.devices:
-                    return lambda *vs: jnp.zeros(out_pad, dtype)
-                dev = order.devices[pos]
-                in_shapes = [t.annots[k].device_shape(dev, shapes[t.name])
-                             for t in op.inputs]
-                out_local = tuple(annot.device_shape(dev, out_shape))
-
-                impl = self._attn_impl.get((id(op), dev), "ref")
-
-                def f(*vs):
-                    locs = [v[tuple(slice(0, s) for s in shp)]
-                            for v, shp in zip(vs, in_shapes)]
-                    if impl == "pallas":
-                        from repro.kernels.ops import attention as attn_kernel
-                        y = attn_kernel(*locs,
-                                        causal=op.attrs.get("causal", True),
-                                        use_kernel="pallas")
-                    else:
-                        y = local_apply(op.kind, jnp, locs, op.attrs,
-                                        out_local)
-                    buf = jnp.zeros(out_pad, dtype)
-                    return buf.at[tuple(slice(0, s)
-                                        for s in y.shape)].set(
-                        y.astype(dtype))
-
-                return f
-
-            return jax.lax.switch(i, [branch_for(p) for p in range(n_mesh)],
-                                  *ins)
+        def emit_segment(seg, tenv, i):
+            import jax
+            import jax.numpy as jnp
+            live_in, live_out = self._seg_live[id(seg)]
+            if not live_out:
+                return              # dead code: nothing escapes
+            # shared dtype chain (class-independent: promotion depends
+            # only on input dtypes, identical across classes)
+            dtypes: dict[str, np.dtype] = {}
+            for op in seg.ops:
+                dtypes[op.outputs[0].name] = result_dtype(
+                    op.kind,
+                    [dtypes.get(t.name, None)
+                     or np.dtype(tenv[t.name].dtype)
+                     for t in op.inputs])
+            out_pads = {
+                n: pad_shape(graph.tensors[n].annots[k], shapes[n])
+                for n in live_out}
+            args = [tenv[n] for n in live_in]
+            n_cls = seg.n_classes
+            pos_cls = []
+            for p in range(n_mesh):
+                c = seg.class_of(order.devices[p]) \
+                    if p < len(order) else None
+                pos_cls.append(n_cls if c is None else c)
+            if n_cls == 1 and all(c == 0 for c in pos_cls):
+                outs = run_class(seg, seg.classes[0], dtypes, live_in,
+                                 live_out, out_pads, args)
+            else:
+                branches = [
+                    (lambda cls: lambda *vs: run_class(
+                        seg, cls, dtypes, live_in, live_out, out_pads,
+                        vs))(cls)
+                    for cls in seg.classes]
+                if any(c == n_cls for c in pos_cls):
+                    branches.append(lambda *vs: tuple(
+                        jnp.zeros(out_pads[n], dtypes[n])
+                        for n in live_out))
+                tbl = jnp.asarray(pos_cls, jnp.int32)
+                outs = jax.lax.switch(tbl[i], branches, *args)
+            for name, y in zip(live_out, outs):
+                tenv[name] = y
 
         # placeholders carry a per-microbatch axis in microbatched mode;
         # parameters are microbatch-invariant and stay single-buffer
@@ -213,18 +313,92 @@ class LoweredGraph:
                         if t.producer is not None
                         and t.producer.kind == "placeholder"}
         m = num_microbatches
+        entries = self.ir.entries
 
         def eval_ops(tenv, i):
-            for op in graph.ops:
-                if op.kind in ("placeholder", "parameter"):
-                    continue
-                out_name = op.outputs[0].name
-                if op.kind == "comm":
-                    x = tenv[op.inputs[0].name]
-                    tenv[out_name] = lowerings[id(op)].apply(x, i, x.dtype)
+            import jax.numpy as jnp
+
+            # single-stage uniform reduces (the grad-reduce common case)
+            # are DEFERRED and batched: one fused multi-operand psum per
+            # distinct group partition instead of one collective per
+            # comm op — collectives on a host mesh are latency-bound,
+            # so rendezvous count is what matters.  A deferred value is
+            # flushed the moment a segment or comm op consumes it; the
+            # fold order per group is unchanged, so results stay
+            # bit-identical to one-at-a-time emission.
+            deferred: dict[str, tuple] = {}
+
+            def flush(names=None):
+                todo = [(n, deferred.pop(n)) for n in
+                        (list(deferred) if names is None else names)
+                        if n in deferred]
+                by_key: dict[tuple, list] = {}
+                for name, item in todo:
+                    pl, uni, x, od = item
+                    # fast mode and two-source exact groups both run a
+                    # native-dtype psum (for k<=2 it IS the f64 fold
+                    # cast back, bitwise); only larger exact groups
+                    # need the ordered float64 fold
+                    path = "psum" if pl.reduction == "fast" \
+                        or uni["k"] <= 2 else "fold"
+                    key = (tuple(tuple(g) for g in uni["groups"]), path)
+                    by_key.setdefault(key, []).append((name,) + item)
+                for (gk, path), items in by_key.items():
+                    if path == "fold":
+                        for name, pl, uni, x, od in items:
+                            tenv[name] = pl._emit_uniform_stage(x, uni,
+                                                                od)
+                        continue
+                    contribs = [x[uni["src_rel"]]
+                                for name, pl, uni, x, od in items]
+                    # one flat buffer -> ONE all-reduce (a variadic
+                    # psum is split back per operand by XLA); summing
+                    # the concatenation is elementwise, so results are
+                    # bitwise those of per-op collectives
+                    dt = jnp.result_type(*(c.dtype for c in contribs))
+                    flat = jnp.concatenate(
+                        [c.astype(dt).ravel() for c in contribs]) \
+                        if len(contribs) > 1 else contribs[0]
+                    y_all = jax.lax.psum(
+                        flat, axis,
+                        axis_index_groups=[list(g) for g in gk])
+                    off = 0
+                    for (name, pl, uni, x, od), c in zip(items,
+                                                         contribs):
+                        if len(contribs) == 1:
+                            y = y_all
+                        else:
+                            n = int(np.prod(c.shape)) if c.shape else 1
+                            y = y_all[off:off + n].reshape(
+                                c.shape).astype(c.dtype)
+                            off += n
+                        tenv[name] = jnp.zeros(uni["next_pad"], od).at[
+                            uni["dst_rel"]].set(
+                                y[uni["piece_rel"]].astype(od))
+
+            for entry in entries:
+                if isinstance(entry, CommSlot):
+                    op = entry.op
+                    in_name = op.inputs[0].name
+                    if in_name in deferred:
+                        flush([in_name])
+                    x = tenv[in_name]
+                    pl = lowerings[id(op)]
+                    unis = pl._uniform_stages
+                    if len(unis) == 1 and unis[0] is not None \
+                            and unis[0]["kind"] == "reduce":
+                        deferred[op.outputs[0].name] = \
+                            (pl, unis[0], x, x.dtype)
+                    else:
+                        tenv[op.outputs[0].name] = pl.apply(x, i,
+                                                            x.dtype)
                 else:
-                    tenv[out_name] = emit_compute(
-                        op, [tenv[t.name] for t in op.inputs], i)
+                    live_in, _ = self._seg_live[id(entry)]
+                    pend = [n for n in live_in if n in deferred]
+                    if pend:
+                        flush(pend)
+                    emit_segment(entry, tenv, i)
+            flush()
             return tenv
 
         def body(*blocks):
@@ -257,7 +431,7 @@ class LoweredGraph:
                           for f in self.fetches)
         jitted = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
                                    out_specs=out_specs, check_rep=False))
-        self.fn = maybe_x64(jitted, has_reduce and reduction == "exact")
+        self.fn = maybe_x64(jitted, needs_x64 and reduction == "exact")
 
     # -- introspection (lazy: not on the lowering/execution path) ----------
 
@@ -284,27 +458,70 @@ class LoweredGraph:
 
     # -- pack / unpack -----------------------------------------------------
 
-    def _pack(self, st: ShardedTensor, annot, shape) -> np.ndarray:
-        return pack_shards(st.parts, annot, shape, self.n_mesh, self.order)
+    def _pack(self, st: ShardedTensor, annot, shape,
+              buf_key: str | None = None) -> np.ndarray:
+        # leaf blocks are re-packed every step with identical geometry;
+        # keyed buffers skip the zeroed allocation (safe: device_put
+        # copies into per-device buffers before the next pack runs)
+        out = self._pack_bufs.get(buf_key) if buf_key else None
+        stacked = pack_shards(st.parts, annot, shape, self.n_mesh,
+                              self.order, out=out)
+        if buf_key:
+            self._pack_bufs[buf_key] = stacked
+        return stacked
 
     def _put(self, stacked: np.ndarray):
+        return self._put_all([stacked])[0]
+
+    def _put_all(self, blocks: list[np.ndarray]):
+        """One batched ``device_put`` for all leaf blocks."""
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         axis = self.mesh.axis_names[0]
-        spec = P(axis, *([None] * (stacked.ndim - 1)))
-        return jax.device_put(stacked, NamedSharding(self.mesh, spec))
+        shardings = [
+            NamedSharding(self.mesh, P(axis, *([None] * (b.ndim - 1))))
+            for b in blocks]
+        return jax.device_put(blocks, shardings)
 
-    def _unpack(self, name: str, arr: np.ndarray) -> ShardedTensor:
+    def _unpack(self, name: str, rows: list) -> ShardedTensor:
+        # parts are views into the fetched host rows (we own them; the
+        # optimizer and gather paths never mutate shards in place)
         annot = self.graph.tensors[name].annots[self.k]
         shape = self.shapes[name]
         parts = {
-            dev: arr[(self.order.pos(dev),)
-                     + tuple(slice(0, s)
-                             for s in annot.device_shape(dev, shape))
-                     ].copy()
+            dev: rows[self.order.pos(dev)][
+                tuple(slice(0, s)
+                      for s in annot.device_shape(dev, shape))]
             for dev in annot.devices}
         return ShardedTensor(shape, annot, parts)
+
+    def _fetch_rows(self, outs) -> list:
+        """Per-mesh-position host rows for each fetched device array.
+
+        On the CPU backend each per-device shard is host memory already,
+        so ``np.from_dlpack`` views it without the stitch-and-copy that
+        ``jax.device_get`` performs on a sharded array (the DLPack
+        capsule keeps the jax buffer alive for as long as the views
+        are).  Falls back to one bulk ``device_get`` elsewhere."""
+        import jax
+
+        try:
+            per_out = []
+            for out in outs:
+                rows: list = [None] * self.n_mesh
+                for sh in out.addressable_shards:
+                    idx = sh.index[0]
+                    pos = (idx.start or 0) if isinstance(idx, slice) \
+                        else int(idx)
+                    rows[pos] = np.from_dlpack(sh.data)[0]
+                if any(r is None for r in rows):
+                    raise ValueError("unaddressable shard")
+                per_out.append(rows)
+            return per_out
+        except Exception:
+            return [[arr[i] for i in range(self.n_mesh)]
+                    for arr in jax.device_get(outs)]
 
     def run(self, state: dict[str, ShardedTensor]
             ) -> dict[str, ShardedTensor]:
@@ -317,11 +534,12 @@ class LoweredGraph:
             if t.name not in state:
                 raise ValueError(f"missing leaf tensor {t.name!r}")
             annot = t.annots[self.k]
-            blocks.append(self._put(self._pack(
-                state[t.name], annot, self.shapes[t.name])))
-        outs = self.fn(*blocks)
-        return {name: self._unpack(name, np.asarray(out))
-                for name, out in zip(self.fetches, outs)}
+            blocks.append(self._pack(
+                state[t.name], annot, self.shapes[t.name],
+                buf_key=t.name))
+        outs = self._fetch_rows(self.fn(*self._put_all(blocks)))
+        return {name: self._unpack(name, rows)
+                for name, rows in zip(self.fetches, outs)}
 
     def run_microbatches(self, states: list[dict[str, ShardedTensor]]
                          ) -> list[dict[str, ShardedTensor]]:
@@ -345,28 +563,34 @@ class LoweredGraph:
                     if t.name not in st:
                         raise ValueError(
                             f"missing leaf tensor {t.name!r}")
-                blocks.append(self._put(np.stack(
-                    [self._pack(st[t.name], annot, shape)
-                     for st in states], axis=1)))
+                blocks.append(np.stack(
+                    [self._pack(st[t.name], annot, shape,
+                                buf_key=f"{t.name}#{j}")
+                     for j, st in enumerate(states)], axis=1))
             else:
                 if t.name not in states[0]:
                     raise ValueError(f"missing leaf tensor {t.name!r}")
-                blocks.append(self._put(self._pack(
-                    states[0][t.name], annot, shape)))
-        outs = self.fn(*blocks)
+                blocks.append(self._pack(states[0][t.name], annot,
+                                         shape, buf_key=t.name))
+        outs = self._fetch_rows(self.fn(*self._put_all(blocks)))
         results: list[dict[str, ShardedTensor]] = [{} for _ in range(m)]
-        for name, out in zip(self.fetches, outs):
-            arr = np.asarray(out)          # (n_mesh, m, *pad)
-            for j in range(m):
-                results[j][name] = self._unpack(name, arr[:, j])
+        for name, rows in zip(self.fetches, outs):
+            for j in range(m):                  # rows[pos] (m, *pad)
+                results[j][name] = self._unpack(
+                    name, [r[j] for r in rows])
         return results
 
 
 def plan_input_name(graph: Graph, op_id: int) -> str:
-    for op in graph.comm_ops:
-        if id(op) == op_id:
-            return op.inputs[0].name
-    raise KeyError(op_id)
+    """Input tensor name of the CommOp with ``id(op) == op_id``.
+
+    Kept for external callers; ``LoweredGraph`` itself builds the
+    id -> op map once instead of re-scanning per plan."""
+    by_id = {id(op): op for op in graph.comm_ops}
+    try:
+        return by_id[op_id].inputs[0].name
+    except KeyError:
+        raise KeyError(op_id) from None
 
 
 def lower_graph(graph: Graph, strategy: int = 0, *,

@@ -590,7 +590,7 @@ def run_all(max_devices: int = 8) -> dict:
         from repro.search import Searcher, cpu_hetero_cluster, tiny_spec
 
         searcher = Searcher(tiny_spec(), global_batch=8, seq_len=128,
-                            tp_options=(1,), pp_options=(1, 2),
+                            tp_options=(1, 2), pp_options=(1, 2),
                             pipeline_options=(1, 2), virtual_options=(1,))
         result = searcher.search(cpu_hetero_cluster(2, 2), validate_top=3,
                                  executors=("sim", "jax"), mesh=meshes[4],
@@ -634,8 +634,12 @@ def run_all(max_devices: int = 8) -> dict:
     if 4 in meshes:
         record("grouped:reduce/4", grouped_case)
 
-    # 9. batched-permute fusion: fewer collective launches than pairs,
-    #    same bits (the differential sweep above re-proves exactness)
+    # 9. copy-stage lowering tiers: the full-mesh AG multicast is a
+    #    *uniform gather stage* — one all_gather, zero permutes, zero
+    #    switches — while a plan narrower than the mesh falls back to
+    #    the general path, whose per-(src,dst) ppermute pairs fuse into
+    #    batched permutes (fewer launches than pairs, same bits; the
+    #    differential sweep above re-proves exactness)
     def fusion_case():
         from repro.core.comm_resolve import resolve
         from repro.runtime.backend import compile_plan
@@ -643,15 +647,29 @@ def run_all(max_devices: int = 8) -> dict:
         src, dst = kind_cases(big)["AG"]
         plan = resolve(src, dst, SHAPE)
         cp = compile_plan(plan, SHAPE, meshes[big])
-        stats = cp.stats
-        assert stats.copy_pairs > 0 and \
-            stats.ppermute_calls < stats.copy_pairs, vars(stats)
+        uni = cp.stats
+        assert uni.uniform_copy_stages == uni.stages > 0, vars(uni)
+        assert uni.ppermute_calls == 0, vars(uni)
         out = cp({d: v for d, v in
                   zip(range(big), np.split(value, big, axis=0))})
         for dev in range(big):  # after AG every device holds the value
             np.testing.assert_array_equal(out[dev], value)
+
+        small = big // 2        # narrower than the mesh -> general path
+        src, dst = kind_cases(small)["AG"]
+        plan = resolve(src, dst, SHAPE)
+        cp = compile_plan(plan, SHAPE, meshes[big])
+        stats = cp.stats
+        assert stats.uniform_copy_stages == 0, vars(stats)
+        assert stats.copy_pairs > 0 and \
+            stats.ppermute_calls < stats.copy_pairs, vars(stats)
+        out = cp({d: v for d, v in
+                  zip(range(small), np.split(value, small, axis=0))})
+        for dev in range(small):
+            np.testing.assert_array_equal(out[dev], value)
         return {"copy_pairs": stats.copy_pairs,
-                "ppermute_calls": stats.ppermute_calls}
+                "ppermute_calls": stats.ppermute_calls,
+                "uniform_copy_stages": uni.uniform_copy_stages}
     record(f"fusion:stats/{big}", fusion_case)
 
     report["ok"] = all(c["ok"] for c in report["cases"].values())

@@ -1,0 +1,250 @@
+"""Specialization-class partition (`core.lowered_ir`): the layer both
+executors lower onto.
+
+Property tests for the partition itself — homogeneous TP/DP strategies
+collapse to exactly one class per segment, pipeline fixtures get one
+participant class plus idle devices, the hsize=2 hetero fixture gets the
+two classes its two shard geometries demand, and the partition structure
+is invariant under device renumbering.  Every partition is cross-checked
+against progressive specialization's per-device ExecItems (the ground
+truth, ``check_against_exec_items``).  The matching emission accounting
+(``LoweringStats.switch_branches_emitted`` etc.) is asserted on real
+lowered programs in the runtime selftest and the graph-block benchmark
+smoke; bit-exact sim<->jax training across m x {1f1b, gpipe,
+interleaved} on the refactored path runs in ``tests/test_runtime.py``
+(``api:train/*`` selftest cases).
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.testing import (hetero_program, hetero_values,
+                               loss_pipeline_program, loss_pipeline_values)
+from repro.core.lowered_ir import (CommSlot, Segment, SegmentClass,
+                                   check_against_exec_items,
+                                   partition_graph)
+
+
+def uniform_program(n, x_ds, w_ds, name="uni"):
+    """One-segment program (no comm): ``L = sum(relu(X @ W))`` with the
+    leaves sharded per ``x_ds`` / ``w_ds`` over all ``n`` devices."""
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W", (16, 8))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W"], name="H0"), name="H")
+    g.sum(g.sum(h, 1, name="L1"), 0, name="L")
+    devs = list(range(n))
+    strat = api.Strategy(name, {
+        "X": api.spmd(devs, x_ds),
+        "W": api.spmd(devs, w_ds),
+    })
+    return api.Program(g, [strat])
+
+
+def pipe_program(s0, s1, name="pipe"):
+    """The 2-stage loss pipeline with EXPLICIT device groups (the
+    testing fixture with renumberable devices)."""
+    half = len(s0)
+    col = api.DS({1: half}) if half > 1 else api.DS({})
+    row = api.DS({0: half}) if half > 1 else api.DS({})
+    g = api.Graph()
+    g.placeholder("X", (16, 16))
+    g.parameter("W1", (16, 12))
+    h = g.relu(g.dot(g.tensors["X"], g.tensors["W1"], name="H0"),
+               name="H")
+    g.comm(h, name="H2")
+    g.parameter("W2", (12, 6))
+    y = g.dot(g.tensors["H2"], g.tensors["W2"], name="Y")
+    g.sum(g.sum(y, 1, name="L1"), 0, name="L")
+    strat = api.Strategy(name, {
+        "X": api.spmd(list(s0), api.DS({api.DUP: half})),
+        "W1": api.spmd(list(s0), col),
+        "H2": api.spmd(list(s1), row),
+        "W2": api.spmd(list(s1), api.DS({api.DUP: half})),
+    })
+    return api.Program(g, [strat])
+
+
+def ir_of(plan):
+    return partition_graph(plan.graph, plan.strategy_index,
+                           shapes=plan.shapes)
+
+
+def structure(ir):
+    """Renumbering-invariant shape of a partition: per segment, the
+    sorted multiset of (class size, per-op specs)."""
+    return [sorted((c.n_devices, c.specs) for c in seg.classes)
+            for seg in ir.segments]
+
+
+# -- homogeneous strategies: exactly one class -------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+@pytest.mark.parametrize("kind", ["dp", "tp"])
+def test_homogeneous_single_class(kind, n):
+    """Pure DP (batch row-split) and pure TP (column-split) put every
+    device in ONE class for EVERY segment: the straight-line case the
+    jax lowering emits with zero switches."""
+    dup = api.DS({api.DUP: n})
+    if kind == "dp":                # batch row-split, weight replicated
+        x_ds, w_ds = api.DS({0: n}), dup
+    else:                           # TP: weight column-split
+        x_ds, w_ds = dup, api.DS({1: n})
+    plan = uniform_program(n, x_ds, w_ds, name=kind).compile(kind)
+    ir = ir_of(plan)
+    assert len(ir.segments) >= 1
+    for seg in ir.segments:
+        assert seg.is_homogeneous(), seg.describe()
+        assert seg.classes[0].devices == tuple(range(n))
+    assert ir.class_counts() == [1] * len(ir.segments)
+    check_against_exec_items(ir, plan.specialization)
+
+
+def test_homogeneous_training_graph_single_class():
+    """The joint fwd+bwd graph of a homogeneous strategy stays
+    single-class in every compute segment (backward ops included)."""
+    plan = uniform_program(4, api.DS({0: 4}), api.DS({api.DUP: 4}),
+                           name="dp").compile_train("dp")
+    ir = ir_of(plan)
+    assert all(seg.is_homogeneous() for seg in ir.segments), \
+        ir.describe()
+    check_against_exec_items(ir, plan.specialization)
+
+
+# -- pipeline stages: one participant class + idle devices -------------------
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_pipeline_stage_classes(n):
+    """Each stage's segment has exactly one participant class (the
+    stage's devices) and the other stage idle — the lowering emits one
+    real branch + one zero branch, never per-device branches."""
+    plan = loss_pipeline_program(n).compile("pipe")
+    ir = ir_of(plan)
+    half = n // 2
+    s0, s1 = tuple(range(half)), tuple(range(half, n))
+    assert len(ir.segments) == 2 and len(ir.comm_slots) == 1
+    first, second = ir.segments
+    assert first.n_classes == 1 and first.classes[0].devices == s0
+    assert first.idle_devices == s1
+    assert second.n_classes == 1 and second.classes[0].devices == s1
+    assert second.idle_devices == s0
+    for dev in s0:
+        assert first.class_of(dev) == 0 and second.class_of(dev) is None
+    check_against_exec_items(ir, plan.specialization)
+
+
+def test_entries_alternate_with_comm_slots():
+    plan = loss_pipeline_program(4).compile("pipe")
+    ir = ir_of(plan)
+    kinds = [type(e) for e in ir.entries]
+    assert kinds == [Segment, CommSlot, Segment]
+    assert ir.comm_slots[0].op.outputs[0].name == "H2"
+    assert ir.total_classes() == 2
+    assert "classes" in ir.describe()
+
+
+# -- hetero (hsize=2): one class per shard geometry --------------------------
+
+def test_hetero_two_classes_per_segment():
+    """The hsize=2 fixture (subgroup [0,1] row-splits its slab, [2,3]
+    duplicates) yields exactly TWO classes in each segment — one per
+    local shard geometry — and the class specs really differ in their
+    local input shapes."""
+    plan = hetero_program().compile("het")
+    ir = ir_of(plan)
+    assert ir.class_counts() == [2, 2], ir.describe()
+    for seg in ir.segments:
+        assert not seg.idle_devices
+        (a, b) = seg.classes
+        assert {a.devices, b.devices} == {(0, 1), (2, 3)}
+        assert a.specs != b.specs
+    check_against_exec_items(ir, plan.specialization)
+
+
+def test_hetero_training_partition_checks_out():
+    plan = hetero_program().compile_train("het")
+    ir = ir_of(plan)
+    assert all(seg.n_classes >= 1 for seg in ir.segments)
+    check_against_exec_items(ir, plan.specialization)
+
+
+# -- renumbering invariance --------------------------------------------------
+
+def test_partition_structure_stable_under_renumbering():
+    """Permuting the device ids permutes class MEMBERS but leaves the
+    partition structure (class sizes and per-op specs) identical."""
+    base = pipe_program([0, 1], [2, 3], name="a").compile("a")
+    renum = pipe_program([3, 1], [0, 2], name="b").compile("b")
+    ir_a, ir_b = ir_of(base), ir_of(renum)
+    assert structure(ir_a) == structure(ir_b)
+    # members really moved: stage 0 is {0,1} in one, {1,3} in the other
+    assert ir_a.segments[0].classes[0].devices == (0, 1)
+    assert set(ir_b.segments[0].classes[0].devices) == {1, 3}
+    check_against_exec_items(ir_b, renum.specialization)
+
+
+def test_hetero_structure_stable_under_subgroup_swap():
+    """Swapping which devices form the split vs duplicated subgroup
+    keeps the same two-class structure."""
+    ha = hetero_program().compile("het")
+    ir = ir_of(ha)
+    sizes = [sorted(c.n_devices for c in seg.classes)
+             for seg in ir.segments]
+    assert sizes == [[2, 2], [2, 2]]
+
+
+# -- partition feeds the emitters --------------------------------------------
+
+def test_class_specs_match_device_shards():
+    """Each class's OpSpec shapes equal the actual per-device shard
+    shapes the simulator executes with (integer fixture values)."""
+    plan = hetero_program().compile("het")
+    xv, ws, _, _ = hetero_values()
+    ir = ir_of(plan)
+    k, shapes = plan.strategy_index, plan.shapes
+    for seg in ir.segments:
+        for cls in seg.classes:
+            for op, spec in zip(seg.ops, cls.specs):
+                if spec is None:
+                    continue
+                for dev in cls.devices:
+                    for t, shp in zip(op.inputs, spec.in_shapes):
+                        want = t.annots[k].device_shape(
+                            dev, shapes[t.name])
+                        assert tuple(want) == tuple(shp)
+
+
+def test_segment_class_dataclass_basics():
+    cls = SegmentClass(devices=(0, 1), specs=(None,))
+    assert cls.n_devices == 2
+    seg = Segment(ops=[], classes=[cls], idle_devices=(2,))
+    assert not seg.is_homogeneous()
+    assert seg.class_of(0) == 0 and seg.class_of(2) is None
+    assert "idle=1" in seg.describe()
+
+
+# -- executed parity on the partitioned path (sim, in-process) ---------------
+
+def test_sim_vectorized_path_matches_reference_values():
+    """The class-vectorized simulator dispatch produces the exact
+    integer-fixture loss and gradients (stacked numpy application is
+    bit-identical to per-device application)."""
+    prog = hetero_program()
+    xv, ws, want_loss, want_grads = hetero_values()
+    sess = api.Session(prog, "het")
+    sess.load(ws)
+    r = sess.train_step({"X": xv})
+    assert r.loss == want_loss
+    for name, want in want_grads.items():
+        for dev, part in r.grads[name].parts.items():
+            np.testing.assert_array_equal(part, want.astype(np.float32))
+
+
+def test_sim_vectorized_pipeline_matches_reference_values():
+    prog = loss_pipeline_program(4)
+    xv, ws, want_y = loss_pipeline_values()
+    sess = api.Session(prog, "pipe")
+    sess.load(ws)
+    r = sess.train_step({"X": xv}, num_microbatches=4, schedule="1f1b")
+    assert r.loss == float(want_y.sum())
