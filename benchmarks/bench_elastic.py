@@ -1,14 +1,52 @@
-"""Fig 14 reproduction: elastic training traces.
+"""Fig 14 reproduction + the live elastic-driver recovery benchmark.
 
-Hetu (two fault-isolated pipelines + fused-BSR reconfiguration, no
-restart) vs the checkpoint-and-restart uniform baseline, on both the
-homogeneous (32 H20) and heterogeneous (16 H800 + 32 H20) traces."""
+Two halves, matching ``repro.elastic``:
+
+* the ANALYTIC half (``rows()``, consumed by ``benchmarks.run``):
+  Hetu (two fault-isolated pipelines + fused-BSR reconfiguration, no
+  restart) vs the checkpoint-and-restart uniform baseline on the
+  homogeneous (32 H20) and heterogeneous (16 H800 + 32 H20) cost-model
+  traces.
+* the LIVE half (``bench()``): a real :class:`repro.elastic.
+  ElasticDriver` run over a shrink / grow / class-change trace with
+  durable checkpoints.  Per transition it measures what the elastic
+  path actually paid (strategy re-selection + fused-BSR migration wall
+  seconds, zero lost steps) against what a checkpoint-restart baseline
+  would pay at the same point: a MEASURED ``store.restore`` of the
+  checkpoint it would reload, a MEASURED cold-session first-step
+  (recompile) overhead, plus the steps since that checkpoint replayed
+  at the median measured step wall.  The headline is
+  ``recovered_seconds`` — baseline minus elastic, summed over
+  transitions.
+
+::
+
+    PYTHONPATH=src python -m benchmarks.bench_elastic [--smoke]
+
+``--smoke`` (what CI runs) asserts the driver beats the restart
+baseline on recovered seconds and leaves ``BENCH_elastic.json``
+untouched; the default run rewrites the JSON.
+"""
 
 from __future__ import annotations
 
-from repro.core.costmodel import ClusterSpec, H20, LLAMA_32B, paper_cluster
+import argparse
+import json
+import os
+import shutil
+import statistics
+import tempfile
+import time
+
+from repro.core.costmodel import ClusterSpec, H20, paper_cluster
 from repro.scenarios.elastic import (TRACE_HETERO, TRACE_HOMOG,
                                      checkpoint_restart_baseline, run_trace)
+
+# the live trace: shrink at 3, grow at 6, class-change at 8
+LIVE_TRACE = [(0, (0, 1, 2, 3), "dp"), (3, (0, 1), "dp"),
+              (6, (0, 1, 2, 3), "dp"), (8, (0, 1, 2, 3), "pp")]
+LIVE_STEPS = 10
+CHECKPOINT_EVERY = 2
 
 
 def rows():
@@ -28,9 +66,113 @@ def rows():
     return out
 
 
-def main():
-    for name, seconds, derived in rows():
-        print(f"{name},{seconds * 1e6:.0f},{derived}")
+def _measure_cold_start() -> tuple[float, float]:
+    """(restore_s, compile_s): what a restart pays before its first
+    useful step — reload the checkpoint and recompile the train step.
+    Both measured, not modeled."""
+    from repro.checkpoint import store
+    from repro.elastic.fixtures import (probe_feeds, probe_graph,
+                                        probe_layout, probe_values,
+                                        reference_run)
+
+    tmp = tempfile.mkdtemp(prefix="bench-elastic-ck-")
+    try:
+        sess, _ = reference_run(probe_layout([0, 1], "dp"), 1)
+        from repro.core.simulator import gather
+        tree = {"weights": {n: gather(st)
+                            for n, st in sess.weights.items()}}
+        store.save(os.path.join(tmp, "ck"), tree, step=1)
+        t0 = time.perf_counter()
+        store.restore(os.path.join(tmp, "ck"), tree)
+        restore_s = time.perf_counter() - t0
+
+        # cold first step (program build + plan compile) vs warm step
+        t0 = time.perf_counter()
+        sess2, _ = reference_run(probe_layout([0, 1], "dp"), 1)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sess2.train_step(probe_feeds(1))
+        warm = time.perf_counter() - t0
+        return restore_s, max(cold - warm, 0.0)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def bench(smoke: bool = False) -> dict:
+    from repro.elastic import ElasticDriver
+    from repro.elastic.fixtures import (probe_feeds, probe_graph,
+                                        probe_provider, probe_values)
+
+    ckdir = tempfile.mkdtemp(prefix="bench-elastic-run-")
+    try:
+        driver = ElasticDriver(probe_graph(), probe_values(),
+                               probe_provider(), probe_feeds,
+                               num_microbatches=2,
+                               checkpoint_every=CHECKPOINT_EVERY,
+                               ckpt_dir=ckdir)
+        run = driver.run(LIVE_TRACE, LIVE_STEPS)
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+    step_s = statistics.median(s.wall_seconds for s in run.steps)
+    restore_s, compile_s = _measure_cold_start()
+
+    transitions = []
+    recovered = 0.0
+    for t in run.transitions:
+        elastic_s = t.select_seconds + t.report.wall_seconds
+        # the baseline restarts from the newest checkpoint <= t.step and
+        # replays everything since it at the measured step wall
+        ck_step = (t.step // CHECKPOINT_EVERY) * CHECKPOINT_EVERY
+        lost = t.step - ck_step
+        baseline_s = restore_s + compile_s + lost * step_s
+        recovered += baseline_s - elastic_s
+        transitions.append({
+            "step": t.step, "kind": t.kind,
+            "src": t.report.src_name, "dst": t.report.dst_name,
+            "elastic_s": elastic_s, "baseline_s": baseline_s,
+            "lost_steps_replayed": lost,
+            "bsr_messages": t.report.message_count,
+        })
+
+    report = {
+        "smoke": smoke,
+        "trace": [[s, list(r), lay] for s, r, lay in LIVE_TRACE],
+        "n_steps": LIVE_STEPS,
+        "checkpoint_every": CHECKPOINT_EVERY,
+        "median_step_s": step_s,
+        "restore_s": restore_s,
+        "compile_s": compile_s,
+        "transitions": transitions,
+        "recovered_seconds": recovered,
+        "transition_kinds": run.transition_kinds(),
+        "fig14": [{"name": n, "seconds": s, "derived": d}
+                  for n, s, d in rows()],
+    }
+    assert report["recovered_seconds"] > 0, (
+        "elastic reconfiguration must beat checkpoint-restart on "
+        f"recovered seconds, got {report['recovered_seconds']:.4f}s")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="liveness check only; do not rewrite the JSON")
+    args = ap.parse_args()
+    report = bench(smoke=args.smoke)
+    for t in report["transitions"]:
+        print(f"step {t['step']:2d} {t['kind']:<12s} "
+              f"elastic={t['elastic_s'] * 1e3:7.2f}ms  "
+              f"baseline={t['baseline_s'] * 1e3:7.2f}ms  "
+              f"(replays {t['lost_steps_replayed']} steps)")
+    print(f"recovered_seconds={report['recovered_seconds']:.4f}")
+    if args.smoke:
+        print("smoke ok (BENCH_elastic.json left untouched)")
+        return
+    with open("BENCH_elastic.json", "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print("wrote BENCH_elastic.json")
 
 
 if __name__ == "__main__":

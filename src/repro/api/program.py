@@ -301,6 +301,44 @@ class Program:
     def strategy(self, strategy: "Strategy | str | int") -> Strategy:
         return self.strategies[self.index(strategy)]
 
+    def add_strategy(self, strategy: Strategy) -> int:
+        """Register a strategy discovered AFTER construction (the elastic
+        driver's mid-run re-selection path) and return its index.
+
+        A same-name strategy with identical annotations is a no-op (its
+        existing index is returned — compiled plans stay memoized); a
+        same-name strategy with DIFFERENT annotations is rejected, since
+        strategies compare by name and silently rebinding one would
+        poison every cache keyed on its index.  Appending re-runs
+        deduction over all strategies — deterministic, so previously
+        compiled plans and indices remain valid — and invalidates only
+        the joint fwd+bwd graphs (their backward comm ops carry
+        per-strategy annotations that cannot be extended in place)."""
+        if strategy.name in self.names:
+            k = self.index(strategy.name)
+            if self.strategies[k].annots == strategy.annots:
+                return k
+            raise StrategyError(
+                f"strategy {strategy.name!r} already registered with "
+                f"different annotations; pick a fresh name")
+        strategy.validate_against(self.graph)
+        self.strategies.append(strategy)
+        points = set()
+        for t in self.graph.annotation_points():
+            t.annots.append(strategy.annots[t.name])
+            points.add(id(t))
+        for t in self.graph.tensors.values():
+            if id(t) not in points:
+                t.annots = []
+        self.report = self.graph.deduction_report()
+        # train plans cache joint graphs whose backward ops were comm-
+        # resolved per strategy at build time; rebuild them on demand
+        self._joint_cache.clear()
+        self._compile_cache = {
+            key: plan for key, plan in self._compile_cache.items()
+            if key[0] != "train"}
+        return len(self.strategies) - 1
+
     # -- compile -----------------------------------------------------------
     def compile(self, strategy: "Strategy | str | int", *,
                 shape_env: dict[str, int] | None = None,

@@ -404,9 +404,20 @@ class Session:
     # -- dynamic switching (§6) --------------------------------------------
     def switch(self, strategy: "Strategy | str | int") -> SwitchReport:
         """Fused-BSR migration of all weights to ``strategy``; the session
-        continues restart-free under the new compiled plan."""
-        dst = self.program.index(strategy)
+        continues restart-free under the new compiled plan.
+
+        ``strategy`` may be a Strategy object the Program has never seen
+        (the elastic driver's mid-run re-selection): it is registered via
+        :meth:`Program.add_strategy` first.  The returned report carries
+        the measured end-to-end ``wall_seconds`` of the whole switch plus
+        ``src_name``/``dst_name``."""
+        t_wall = time.perf_counter()
+        if isinstance(strategy, Strategy):
+            dst = self.program.add_strategy(strategy)
+        else:
+            dst = self.program.index(strategy)
         src = self.plan.strategy_index
+        names = self.program.names
         # validate BEFORE the same-strategy fast path: switching with
         # unloaded weights is an error regardless of the destination
         missing = [t.name for t in self.program.graph.parameters()
@@ -418,7 +429,9 @@ class Session:
             from repro.core.bsr import BsrPlan
             return SwitchReport(plan=BsrPlan([]), planning_seconds=0.0,
                                 est_transfer_seconds=0.0, total_bytes=0,
-                                message_count=0)
+                                message_count=0,
+                                wall_seconds=time.perf_counter() - t_wall,
+                                src_name=names[src], dst_name=names[dst])
         backend = "jax" if isinstance(self.executor, JaxExecutor) else "sim"
         mesh = getattr(self.executor, "mesh", None)
         # same topology fallback as Program.compile: explicit session
@@ -441,4 +454,7 @@ class Session:
         self.weights = outcome.weights
         self.plan = self.program.compile(dst, shape_env=self.shape_env,
                                          topology=self.topology)
+        outcome.report.wall_seconds = time.perf_counter() - t_wall
+        outcome.report.src_name = names[src]
+        outcome.report.dst_name = names[dst]
         return outcome.report

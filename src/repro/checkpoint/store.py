@@ -4,17 +4,36 @@ Saves the parameter/optimizer pytree as flat full arrays (npz) plus a JSON
 manifest; restore re-shards onto whatever mesh/strategy is active — so a
 checkpoint written under one parallel strategy loads under any other (the
 checkpoint-and-restart baseline of the paper's elastic scenario, §7.2).
+
+Durability contract (the elastic driver's fault injector leans on it):
+
+* :func:`save` is **atomic at the directory level** — arrays + manifest
+  are staged into a hidden temp directory next to ``path`` and renamed
+  into place, so a fault at ANY point mid-save leaves either the old
+  complete checkpoint or no checkpoint, never a half-written one.
+* :func:`restore` **validates before it deserializes** — a missing /
+  corrupted ``arrays.npz``, a manifest↔npz key drift, or a skeleton that
+  does not match the stored keys all raise a structured
+  :class:`CheckpointError` instead of a deep ``KeyError`` or silently
+  restoring garbage.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, incomplete, corrupted, or does not match
+    the skeleton it is being restored into."""
 
 
 def jnp_asarray(a, skeleton_leaf):
@@ -50,7 +69,12 @@ def _unflatten(flat: dict[str, Any], skeleton):
 
 
 def save(path: str, tree, step: int = 0, meta: dict | None = None) -> None:
-    os.makedirs(path, exist_ok=True)
+    """Write ``tree`` under ``path`` atomically: stage into a temp dir in
+    the same parent, then rename into place (replacing any previous
+    checkpoint at ``path`` only after the new one is complete)."""
+    path = os.path.abspath(path)
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
     flat = _flatten(tree)
     arrays = {}
     for k, v in flat.items():
@@ -58,26 +82,101 @@ def save(path: str, tree, step: int = 0, meta: dict | None = None) -> None:
         if a.dtype.name == "bfloat16":   # npz cannot store ml_dtypes
             a = a.astype(np.float32)
         arrays[k] = a
-    np.savez(os.path.join(path, "arrays.npz"),
-             **{k.replace("/", "|"): v for k, v in arrays.items()})
     manifest = {
         "step": step,
         "meta": meta or {},
         "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                  for k, v in arrays.items()},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".ck-tmp-")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "|"): v for k, v in arrays.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.lexists(path):
+            old = tempfile.mkdtemp(dir=parent, prefix=".ck-old-")
+            # two renames: the previous checkpoint stays complete (just
+            # relocated) until the new one is in place
+            os.rename(path, os.path.join(old, "ck"))
+            os.rename(tmp, path)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def peek(path: str) -> dict:
+    """Load and return just the manifest (step, meta, keys) — validates
+    that ``path`` holds a complete, parseable checkpoint header."""
+    mf = os.path.join(path, "manifest.json")
+    if not os.path.isfile(mf):
+        raise CheckpointError(
+            f"no manifest.json under {path!r} — not a checkpoint "
+            f"(or an interrupted save)")
+    try:
+        with open(mf) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(
+            f"unreadable manifest.json under {path!r}: {e}") from e
+    if not isinstance(manifest, dict) or "keys" not in manifest:
+        raise CheckpointError(
+            f"malformed manifest under {path!r}: missing 'keys'")
+    return manifest
+
+
+def _load_arrays(path: str, manifest: dict) -> dict[str, np.ndarray]:
+    npz = os.path.join(path, "arrays.npz")
+    if not os.path.isfile(npz):
+        raise CheckpointError(
+            f"no arrays.npz under {path!r} — incomplete checkpoint")
+    try:
+        with np.load(npz) as data:
+            # force every member through the zip CRC so truncation /
+            # corruption surfaces here, not as garbage values later
+            flat = {k.replace("|", "/"): np.asarray(data[k])
+                    for k in data.files}
+    except CheckpointError:
+        raise
+    except Exception as e:  # BadZipFile, zlib error, pickle refusals, ...
+        raise CheckpointError(
+            f"corrupted arrays.npz under {path!r}: {e}") from e
+    mkeys = set(manifest["keys"])
+    if set(flat) != mkeys:
+        missing = sorted(mkeys - set(flat))
+        extra = sorted(set(flat) - mkeys)
+        raise CheckpointError(
+            f"manifest/arrays key drift under {path!r}: "
+            f"missing from npz {missing}, not in manifest {extra}")
+    for k, info in manifest["keys"].items():
+        if list(flat[k].shape) != list(info["shape"]):
+            raise CheckpointError(
+                f"checkpoint {path!r} key {k!r}: stored shape "
+                f"{list(flat[k].shape)} != manifest shape {info['shape']}")
+    return flat
 
 
 def restore(path: str, skeleton, shardings=None):
     """Restore into the structure of ``skeleton``; if ``shardings`` (a
     matching pytree of jax.sharding.Sharding) is given, arrays are placed
-    sharded — re-sharding is free at load time."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    flat = {k.replace("|", "/"): data[k] for k in data.files}
+    sharded — re-sharding is free at load time.
+
+    Raises :class:`CheckpointError` (never a bare ``KeyError``) when the
+    checkpoint is incomplete/corrupted or its keys do not match the
+    skeleton's structure."""
+    manifest = peek(path)
+    flat = _load_arrays(path, manifest)
+    skel_keys = set(_flatten(skeleton))
+    if skel_keys != set(flat):
+        missing = sorted(skel_keys - set(flat))
+        extra = sorted(set(flat) - skel_keys)
+        raise CheckpointError(
+            f"checkpoint {path!r} does not match the restore skeleton: "
+            f"skeleton keys absent from checkpoint {missing}, "
+            f"checkpoint keys absent from skeleton {extra}")
     tree = _unflatten(flat, skeleton)
     # restore original dtypes (bf16 was widened for npz)
     tree = jax.tree.map(

@@ -36,9 +36,18 @@ class SwitchReport:
     total_bytes: int
     message_count: int
     per_sender: dict[int, tuple[int, int]] = field(default_factory=dict)
+    # stamped by Session.switch for consumers that track live transitions
+    # (the elastic trace driver): measured end-to-end wall seconds of the
+    # whole switch (plan + execute + recompile) and the strategy names
+    wall_seconds: float = 0.0
+    src_name: str = ""
+    dst_name: str = ""
 
     def summary(self) -> str:
-        return (f"{self.message_count} msgs, {self.total_bytes / 1e6:.1f} MB, "
+        arrow = (f"{self.src_name} -> {self.dst_name}: "
+                 if self.src_name or self.dst_name else "")
+        return (f"{arrow}{self.message_count} msgs, "
+                f"{self.total_bytes / 1e6:.1f} MB, "
                 f"plan {self.planning_seconds * 1e3:.1f} ms, "
                 f"est transfer {self.est_transfer_seconds * 1e3:.1f} ms")
 

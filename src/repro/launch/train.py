@@ -107,6 +107,25 @@ def strategy_report(params, mesh, num_microbatches: int = 1,
                   f"{exc}")
 
 
+def elastic_probe_report() -> None:
+    """Run the elastic probe trace LIVE (``repro.elastic``): real
+    ``train_step``s through a shrink -> grow -> class-change trace with
+    fused-BSR weight+optimizer migration, and print what each
+    transition cost versus replaying it from a checkpoint.  This is the
+    executable counterpart of ``strategy_report``'s analytic drain
+    estimate — see docs/elastic.md."""
+    from repro.elastic import ElasticDriver
+    from repro.elastic.fixtures import (probe_feeds, probe_graph,
+                                        probe_provider, probe_values)
+
+    driver = ElasticDriver(probe_graph(), probe_values(),
+                           probe_provider(), probe_feeds,
+                           num_microbatches=2)
+    run = driver.run([(0, (0, 1, 2, 3), "dp"), (2, (0, 1), "dp"),
+                      (4, (0, 1, 2, 3), "pp")], 6)
+    print(f"elastic probe: {run.summary()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -124,6 +143,11 @@ def main():
                     help="print the repro.api weight-placement + elastic "
                          "drain summary at startup (--no-strategy-report "
                          "skips the deduction/BSR planning it costs)")
+    ap.add_argument("--elastic-probe", action="store_true",
+                    help="also run the live elastic probe trace "
+                         "(repro.elastic: shrink/grow/class-change with "
+                         "fused-BSR migration) and print per-transition "
+                         "costs before training starts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -138,6 +162,8 @@ def main():
         strategy_report(params, mesh, num_microbatches=args.microbatches,
                         cfg=cfg, global_batch=args.batch,
                         seq_len=args.seq)
+    if args.elastic_probe:
+        elastic_probe_report()
     opt_state = init_opt_state(params)
     start = 0
     if args.resume:

@@ -610,6 +610,69 @@ def run_all(max_devices: int = 8) -> dict:
     if 4 in meshes:
         record("search:hetero/4", search_case)
 
+    # 7g. the elastic trace driver: real train_steps through device
+    #     loss/join — each 2-transition trace re-selects a strategy for
+    #     the surviving ranks and migrates weights AND AdamW m/v
+    #     restart-free (Session.switch, fused BSR).  The probe fixture's
+    #     weight gradients are weight-independent integers, so the
+    #     weights / m / v trajectory must be bitwise equal sim vs jax
+    #     AND bitwise equal to an uninterrupted single-strategy
+    #     reference run; only the loss (a float activation sum) is
+    #     reduction-order-dependent and compares to tolerance
+    def elastic_case(trace):
+        from repro import api
+        from repro.core.simulator import gather as gather_st
+        from repro.elastic import ElasticDriver, TraceEvent
+        from repro.elastic.fixtures import (probe_feeds, probe_graph,
+                                            probe_layout, probe_provider,
+                                            probe_values, reference_run)
+
+        def snap(sess):
+            out = {n2: gather_st(st)
+                   for n2, st in sess.weights.items()}
+            for key in ("m", "v"):
+                for n2, st in sess.opt_state[key].items():
+                    out[f"{key}/{n2}"] = gather_st(st)
+            return out
+
+        n_steps = 6
+        ref, ref_losses = reference_run(
+            probe_layout([0, 1, 2, 3], "dp"), n_steps)
+        want = snap(ref)
+        kinds = None
+        losses = {}
+        for ex in (api.SimulatorExecutor(), api.JaxExecutor(meshes[4])):
+            drv = ElasticDriver(
+                probe_graph(), probe_values(), probe_provider(),
+                probe_feeds, executor=ex, num_microbatches=2)
+            run = drv.run([TraceEvent(*e) for e in trace], n_steps)
+            got = snap(drv.session)
+            for k2, a in want.items():
+                np.testing.assert_array_equal(
+                    got[k2], a, err_msg=f"{ex.name}: {k2} drifted from "
+                                        f"the uninterrupted reference")
+            np.testing.assert_allclose(run.losses, ref_losses,
+                                       rtol=1e-5)
+            assert len(run.transitions) == 2, run.summary()
+            losses[ex.name] = run.losses
+            kinds = run.transition_kinds()
+        np.testing.assert_allclose(losses["jax"], losses["sim"],
+                                   rtol=1e-5)
+        return {"kinds": kinds}
+    if 4 in meshes:
+        for key, trc in {
+            "elastic:trace/4to2": [(0, (0, 1, 2, 3), "dp"),
+                                   (2, (0, 1), "dp"),
+                                   (4, (0, 1), "pp")],
+            "elastic:trace/2to4": [(0, (0, 1), "dp"),
+                                   (2, (0, 1, 2, 3), "dp"),
+                                   (4, (0, 1, 2, 3), "pp")],
+            "elastic:trace/hetero": [(0, (0, 1, 2, 3), "dp"),
+                                     (2, (0, 1, 2, 3), "hetero"),
+                                     (4, (0, 1), "dp")],
+        }.items():
+            record(key, lambda trc=trc: elastic_case(trc))
+
     # 8. axis_index_groups subgroup reduces: a SplitAR plan lowers its
     #    cross-subgroup reduce groups onto grouped collectives (the kind
     #    sweep above re-proves bit-exactness on both reduction paths)

@@ -41,6 +41,24 @@ class SearchResult:
 
 
 @dataclass
+class Selection:
+    """Outcome of one mid-run re-selection (:meth:`Searcher.
+    select_candidate`): the winning cost-model strategy, its predicted
+    step time, and where it came from — a searched candidate, or one of
+    the caller's pre-built ``extras``."""
+
+    strategy: object                 # repro.core.costmodel.Strategy
+    predicted_step_s: float
+    candidate: Candidate | None = None   # set when a searched one won
+    extra_index: int | None = None       # set when an extras entry won
+    searched: int = 0                    # ranked candidates considered
+
+    @property
+    def source(self) -> str:
+        return "search" if self.candidate is not None else "extra"
+
+
+@dataclass
 class Searcher:
     """Reusable search configuration for one model.
 
@@ -95,32 +113,45 @@ class Searcher:
                                   repeats=repeats, **validate_kw)
         return SearchResult(ranked, report, validation)
 
-    def select(self, cluster: ClusterSpec,
-               ranks: list[int] | None = None, *,
-               extras=()) -> "object":
+    def select_candidate(self, cluster: ClusterSpec,
+                         ranks: list[int] | None = None, *,
+                         extras=()) -> Selection:
         """Best cost-model :class:`Strategy` among the searched
         candidates AND any ``extras`` (pre-built strategies, e.g. the
         elastic scenario's hand-written fixture) — the mid-run
-        re-selection hook."""
+        re-selection hook, with provenance (what won and why) for the
+        elastic trace driver's transition records."""
         from repro.core.costmodel import step_time
 
         frac = resolve_fwd_fraction(self.fwd_fraction)
-        best, best_t = None, float("inf")
+        sel: Selection | None = None
+        searched = 0
         try:
             result = self.search(cluster, ranks)
-            best = result.best.candidate.strategy
-            best_t = result.best.predicted_step_s
+            searched = len(result.ranked)
+            sel = Selection(result.best.candidate.strategy,
+                            result.best.predicted_step_s,
+                            candidate=result.best.candidate,
+                            searched=searched)
         except SearchError:
             pass
-        for strat in extras:
+        for i, strat in enumerate(extras):
             t = step_time(cluster, self.model, strat, self.seq_len,
                           fwd_fraction=frac)
-            if t < best_t:
-                best, best_t = strat, t
-        if best is None:
+            if sel is None or t < sel.predicted_step_s:
+                sel = Selection(strat, t, extra_index=i,
+                                searched=searched)
+        if sel is None:
             raise RuntimeError("select(): no searched candidate and no "
                                "feasible extras")
-        return best
+        return sel
+
+    def select(self, cluster: ClusterSpec,
+               ranks: list[int] | None = None, *,
+               extras=()) -> "object":
+        """:meth:`select_candidate` without the provenance — just the
+        winning cost-model strategy."""
+        return self.select_candidate(cluster, ranks, extras=extras).strategy
 
 
 def search(cluster: ClusterSpec, model: ModelSpec, *,

@@ -152,6 +152,20 @@ def test_search_validation_bit_exact_and_concordant(report):
     assert case["agreement"] >= 2 / 3, case
 
 
+@pytest.mark.parametrize("key, want_kinds", [
+    ("elastic:trace/4to2", ["shrink", "class-change"]),
+    ("elastic:trace/2to4", ["grow", "class-change"]),
+    ("elastic:trace/hetero", ["class-change", "shrink"]),
+])
+def test_elastic_trace_bit_exact(report, key, want_kinds):
+    """The elastic trace driver: real train_steps through device
+    loss/join, weights + AdamW m/v migrated restart-free — the whole
+    trajectory bitwise equal sim vs jax AND to an uninterrupted
+    single-strategy reference run."""
+    case = _case(report, key)
+    assert case["kinds"] == want_kinds, case
+
+
 def test_grouped_reduce_collectives(report):
     """Reduce groups lower onto axis_index_groups subgroup collectives
     (SplitAR's cross-subgroup groups), bit-exact vs the simulator."""

@@ -107,6 +107,81 @@ def test_checkpoint_cross_strategy_restore(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+def test_checkpoint_bf16_roundtrip_restores_dtype(tmp_path):
+    """bf16 leaves survive the npz trip (stored widened, narrowed back
+    on restore) — bitwise, not just approximately."""
+    from repro.checkpoint.store import restore, save
+    vals = jnp.asarray([1.0, -2.5, 3.0e4, 1.0 / 3.0], jnp.bfloat16)
+    tree = {"w": vals, "f": jnp.arange(3, dtype=jnp.float32)}
+    save(str(tmp_path / "ck"), tree, step=0)
+    restored, _ = restore(str(tmp_path / "ck"), tree)
+    assert restored["w"].dtype == jnp.bfloat16
+    assert restored["f"].dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"], np.float32), np.asarray(vals, np.float32))
+
+
+def test_checkpoint_key_mismatch_structured_error(tmp_path):
+    """Restoring into a skeleton whose keys disagree with the manifest
+    raises CheckpointError naming BOTH the missing and the extra keys."""
+    from repro.checkpoint.store import CheckpointError, restore, save
+    save(str(tmp_path / "ck"), {"w1": jnp.ones(2), "w2": jnp.zeros(2)},
+         step=3)
+    with pytest.raises(CheckpointError) as exc:
+        restore(str(tmp_path / "ck"), {"w1": jnp.ones(2),
+                                       "w3": jnp.ones(2)})
+    msg = str(exc.value)
+    assert "w2" in msg and "w3" in msg
+
+
+def test_checkpoint_manifest_npz_disagreement(tmp_path):
+    """A manifest that lists keys the npz doesn't carry (or the
+    reverse) is a structured CheckpointError, not a KeyError."""
+    import json
+
+    from repro.checkpoint.store import CheckpointError, restore, save
+    save(str(tmp_path / "ck"), {"w": jnp.ones(2)}, step=1)
+    mpath = tmp_path / "ck" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["keys"]["ghost"] = {"shape": [2], "dtype": "float32"}
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointError, match="ghost"):
+        restore(str(tmp_path / "ck"), {"w": jnp.ones(2)})
+
+
+def test_checkpoint_corrupted_npz_detected(tmp_path):
+    """Flipped bytes in the middle of arrays.npz trip zlib's CRC and
+    surface as CheckpointError (every member is force-decompressed)."""
+    from repro.checkpoint.store import CheckpointError, restore, save
+    tree = {"w": jnp.arange(4096, dtype=jnp.float32)}
+    save(str(tmp_path / "ck"), tree, step=2)
+    npz = tmp_path / "ck" / "arrays.npz"
+    blob = bytearray(npz.read_bytes())
+    mid = len(blob) // 2
+    blob[mid:mid + 16] = bytes(16)
+    npz.write_bytes(bytes(blob))
+    with pytest.raises(CheckpointError):
+        restore(str(tmp_path / "ck"), tree)
+
+
+def test_checkpoint_truncated_npz_detected(tmp_path):
+    """A half-written arrays.npz (torn copy / full disk) is detected,
+    as is one missing entirely."""
+    from repro.checkpoint.store import CheckpointError, peek, restore, save
+    tree = {"w": jnp.arange(1024, dtype=jnp.float32)}
+    save(str(tmp_path / "ck"), tree, step=5)
+    npz = tmp_path / "ck" / "arrays.npz"
+    blob = npz.read_bytes()
+    npz.write_bytes(blob[:len(blob) // 3])
+    with pytest.raises(CheckpointError):
+        restore(str(tmp_path / "ck"), tree)
+    npz.unlink()
+    with pytest.raises(CheckpointError):
+        restore(str(tmp_path / "ck"), tree)
+    # peek still reads the (intact) manifest without touching arrays
+    assert peek(str(tmp_path / "ck"))["step"] == 5
+
+
 # ---------------------------------------------------------------------------
 # sharding rules
 # ---------------------------------------------------------------------------
