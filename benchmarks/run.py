@@ -22,6 +22,7 @@ MODULES = [
     ("train_step", "benchmarks.bench_train_step"),
     ("graph_block", "benchmarks.bench_graph_block"),
     ("search", "benchmarks.bench_search"),
+    ("overlap", "benchmarks.bench_overlap"),
 ]
 
 

@@ -52,6 +52,8 @@ from repro.core.switching import (SwitchOutcome, SwitchReport,
 from repro.core.topology import (NvlinkIbTopology, Topology,
                                  UniformTopology)
 
+from repro.runtime.async_program import AsyncExecutor
+
 from .executors import (Executor, JaxExecutor, SimulatorExecutor,
                         get_executor)
 from .program import CompiledPlan, CompileError, CostEstimate, Program
@@ -65,6 +67,7 @@ estimate_switch = plan_tensor_switch
 
 __all__ = [
     "DG", "DS", "DUP", "PARTIAL", "HSPMD", "replicated", "spmd",
+    "AsyncExecutor",
     "CommPlan", "CompileError", "CompiledPlan", "CostEstimate",
     "DeductionError", "DeductionReport", "ExecItem", "ExecutableGraph",
     "Executor", "GradError", "Graph", "JaxExecutor", "MicrobatchError",

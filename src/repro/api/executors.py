@@ -44,7 +44,8 @@ from typing import Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core.op_semantics import local_apply, result_dtype, stacked_apply
-from repro.core.schedule import PipelineSchedule, ScheduleError, assign_stages
+from repro.core.schedule import (SCHEDULES, PipelineSchedule, ScheduleError,
+                                 assign_stages)
 from repro.core.simulator import ShardedTensor, apply_plan
 
 from .program import CompiledPlan
@@ -111,6 +112,9 @@ class SimulatorExecutor:
     network time."""
 
     name = "sim"
+    #: schedule kinds run_schedule accepts (Session validates against
+    #: this before building a timetable)
+    supported_schedules = SCHEDULES
 
     def __init__(self, record_ticks: bool = False):
         self.record_ticks = record_ticks
@@ -276,6 +280,7 @@ class JaxExecutor:
     """Real-device execution: one shard_map program per compiled plan."""
 
     name = "jax"
+    supported_schedules = SCHEDULES
 
     def __init__(self, mesh=None, *, reduction: str = "exact"):
         import weakref
@@ -335,12 +340,25 @@ class JaxExecutor:
         return lw.run_microbatches(list(states))
 
 
+def _executor_registry() -> dict:
+    # AsyncExecutor lives in runtime/ (it is a lowering, like
+    # LoweredGraph); imported lazily to keep api importable without
+    # pulling the runtime package at module load
+    from repro.runtime.async_program import AsyncExecutor
+    return {"sim": SimulatorExecutor, "jax": JaxExecutor,
+            "async": AsyncExecutor}
+
+
 def get_executor(name: str, **kwargs) -> Executor:
-    """Executor registry: ``"sim"`` or ``"jax"`` (deprecation-friendly
-    string form used by CLI flags and old call sites).  Unknown options
-    raise ``TypeError`` instead of vanishing silently."""
-    if name == "sim":
-        return SimulatorExecutor(**kwargs)  # unknown kwargs raise TypeError
-    if name == "jax":
-        return JaxExecutor(**kwargs)  # unknown kwargs raise TypeError
-    raise ValueError(f"unknown executor {name!r} (have: sim, jax)")
+    """Executor registry: ``"sim"``, ``"jax"`` or ``"async"``
+    (deprecation-friendly string form used by CLI flags and old call
+    sites).  Unknown names raise ``ValueError`` listing the valid
+    options; unknown options raise ``TypeError`` instead of vanishing
+    silently."""
+    registry = _executor_registry()
+    cls = registry.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown executor {name!r} "
+            f"(have: {', '.join(sorted(registry))})")
+    return cls(**kwargs)  # unknown kwargs raise TypeError

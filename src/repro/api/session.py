@@ -198,6 +198,12 @@ class Session:
             raise ScheduleError(
                 f"unknown schedule {schedule!r}; valid kinds are "
                 f"{', '.join(repr(s) for s in SCHEDULES)}")
+        supported = getattr(self.executor, "supported_schedules", None)
+        if supported is not None and schedule not in supported:
+            raise ScheduleError(
+                f"executor {getattr(self.executor, 'name', '?')!r} does "
+                f"not support schedule {schedule!r}; it supports "
+                f"{', '.join(repr(s) for s in supported)}")
         if schedule != "interleaved" and v not in (None, 1):
             raise ScheduleError(
                 f"virtual_stages_per_device={v} requires "

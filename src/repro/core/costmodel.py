@@ -298,10 +298,46 @@ def pipeline_tick_durations(cluster: ClusterSpec, model: ModelSpec,
     return out
 
 
+def pipeline_tick_split(cluster: ClusterSpec, model: ModelSpec,
+                        p: PipelineSpec, seq_len: int, *,
+                        virtual_stages_per_device: int = 1,
+                        fwd_fraction: float | None = None
+                        ) -> tuple[dict[tuple[int, str], float],
+                                   dict[tuple[int, str], float]]:
+    """Split each tick of :func:`pipeline_tick_durations` into its
+    ``(compute, comm)`` components for overlap-aware pricing.
+
+    The sync tick ``max(stage/v, p2p_max) * frac`` is decomposed as
+    ``compute = (stage/v) * frac`` and ``comm = (slot - stage/v) *
+    frac`` — the boundary-transfer time the sync slot serializes on top
+    of compute.  By construction ``compute + comm`` equals the sync
+    duration exactly, so ``price_schedule(sched, compute, comm=comm)``
+    reproduces today's sync makespan bit-for-bit, and since
+    ``max(compute, comm) <= compute + comm`` the overlap-priced makespan
+    of the same split can never be worse."""
+    f = FWD_TIME_FRACTION if fwd_fraction is None else fwd_fraction
+    v = virtual_stages_per_device
+    micro_tokens = p.micro_bs * seq_len
+    p2p_max = max(_stage_p2p_times(cluster, model, p, seq_len), default=0.0)
+    comp: dict[tuple[int, str], float] = {}
+    comm: dict[tuple[int, str], float] = {}
+    n_stages = len(p.stages)
+    for s, st in enumerate(p.stages):
+        t_stage = stage_micro_time(cluster, model, st, micro_tokens,
+                                   seq_len) / v
+        hidden = max(t_stage, p2p_max) - t_stage
+        for c in range(v):
+            for phase, frac in (("fwd", f), ("bwd", 1.0 - f)):
+                comp[(c * n_stages + s, phase)] = t_stage * frac
+                comm[(c * n_stages + s, phase)] = hidden * frac
+    return comp, comm
+
+
 def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
                   seq_len: int, kind: str = "1f1b", *,
                   virtual_stages_per_device: int = 1,
-                  fwd_fraction: float | None = None) -> float:
+                  fwd_fraction: float | None = None,
+                  overlap: bool = False) -> float:
     """Seconds for one step of one pipeline, priced from the executable
     timetable: ``core.schedule.build_schedule`` emits the 1F1B/GPipe/
     interleaved tick table the executors would run and
@@ -322,6 +358,15 @@ def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
     Uniform stage costs (v=1) keep the closed-form fast path
     ``fill_drain_count(m, S) * slot + sum(p2p)`` — asserted equal to the
     priced timetable, so the two definitions cannot drift.
+
+    ``overlap=True`` prices the timetable as the async executor runs
+    it: each tick's duration is split into compute and the boundary
+    transfer it hides (:func:`pipeline_tick_split`) and the tick costs
+    ``max(compute, comm)`` instead of their sum.  The fill-ramp latency
+    term is unchanged — overlap hides steady-state transfers behind the
+    next microbatch's compute but cannot hide the first microbatch's
+    traversal.  Overlap pricing of a pipeline is never worse than sync
+    pricing (same split, ``max <= sum`` per tick).
     """
     from .schedule import build_schedule, price_schedule
 
@@ -344,21 +389,33 @@ def pipeline_time(cluster: ClusterSpec, model: ModelSpec, p: PipelineSpec,
     p2p_max = max(p2p_each, default=0.0)
 
     def t_priced() -> float:
-        durations = pipeline_tick_durations(
-            cluster, model, p, seq_len, virtual_stages_per_device=v,
-            fwd_fraction=f)
+        if overlap:
+            durations, comm = pipeline_tick_split(
+                cluster, model, p, seq_len, virtual_stages_per_device=v,
+                fwd_fraction=f)
+        else:
+            durations = pipeline_tick_durations(
+                cluster, model, p, seq_len, virtual_stages_per_device=v,
+                fwd_fraction=f)
+            comm = None
         if kind == "interleaved" and v > 1:
             sched = build_schedule(len(p.stages), p.n_micro,
                                    "interleaved",
                                    virtual_stages_per_device=v)
             # each of the first microbatch's v ring traversals pays the
             # boundary latencies once
-            return price_schedule(sched, durations).makespan \
+            return price_schedule(sched, durations, comm=comm,
+                                  overlap=overlap).makespan \
                 + v * sum(p2p_each)
         sched = build_schedule(len(p.stages), p.n_micro,
                                "gpipe" if kind == "gpipe" else "1f1b")
-        return price_schedule(sched, durations).makespan + sum(p2p_each)
+        return price_schedule(sched, durations, comm=comm,
+                              overlap=overlap).makespan + sum(p2p_each)
 
+    if overlap:
+        # the closed-form fast path encodes the SYNC slot; overlap
+        # pricing must go through the timetable
+        return t_priced()
     if v == 1 and all(t == times[0] for t in times[1:]):  # uniform fast path
         slot = max([times[0]] + p2p_each)
         t_uniform = fill_drain_count(p.n_micro, len(p.stages)) * slot \
@@ -402,20 +459,23 @@ def dp_sync_time(cluster: ClusterSpec, model: ModelSpec,
 
 def step_time(cluster: ClusterSpec, model: ModelSpec, strat: Strategy,
               seq_len: int, *, virtual_stages_per_device: int = 1,
-              fwd_fraction: float | None = None) -> float:
+              fwd_fraction: float | None = None,
+              overlap: bool = False) -> float:
     """One training step: slowest pipeline + cross-pipeline grad sync.
 
     ``fwd_fraction`` (the candidate-facing pricing hook used by the
     search subsystem) re-splits each tick's fwd/bwd durations by a
     measured ratio instead of the analytic :data:`FWD_TIME_FRACTION`;
-    ``virtual_stages_per_device > 1`` prices the interleaved timetable.
+    ``virtual_stages_per_device > 1`` prices the interleaved timetable;
+    ``overlap=True`` prices pipelines under the async executor's
+    comm/compute overlap (never worse than sync pricing).
     """
     kind = ("interleaved" if virtual_stages_per_device > 1
             else strat.schedule)
     t_pipe = max(pipeline_time(
         cluster, model, p, seq_len, kind=kind,
         virtual_stages_per_device=virtual_stages_per_device,
-        fwd_fraction=fwd_fraction)
+        fwd_fraction=fwd_fraction, overlap=overlap)
         for p in strat.pipelines)
     return t_pipe + dp_sync_time(cluster, model, strat)
 

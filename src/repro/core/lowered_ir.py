@@ -206,7 +206,8 @@ def partition_graph(graph: Graph, strategy: int = 0, *,
                     shapes: dict[str, tuple[int, ...]] | None = None,
                     shape_env: dict[str, int] | None = None,
                     impl_of: ImplOf | None = None,
-                    devices: Iterable[int] | None = None) -> LoweredIR:
+                    devices: Iterable[int] | None = None,
+                    ops: Iterable[Op] | None = None) -> LoweredIR:
     """Compute the specialization-class IR of a deduced graph under one
     strategy.
 
@@ -216,6 +217,13 @@ def partition_graph(graph: Graph, strategy: int = 0, *,
     different classes.  ``shapes`` (or ``shape_env`` for symbolic
     graphs) binds tensor shapes; ``devices`` defaults to the union of
     all annotated devices.
+
+    ``ops`` restricts the walk to a subset of ``graph.ops`` (kept in
+    graph order by the caller) — the per-stage MPMD lowering partitions
+    each (virtual stage, phase) bucket separately, since a whole-graph
+    segment may span a stage/phase boundary that has no comm op on it
+    (e.g. the last stage's loss: fwd flows into bwd with no comm
+    between).
     """
     if shapes is None:
         env = shape_env or {}
@@ -239,7 +247,7 @@ def partition_graph(graph: Graph, strategy: int = 0, *,
                 run, devices, strategy, shapes, impl_of))
             run.clear()
 
-    for op in graph.ops:
+    for op in (graph.ops if ops is None else ops):
         if op.kind in ("placeholder", "parameter"):
             continue
         if op.kind == "comm":

@@ -262,8 +262,11 @@ class PricedSchedule:
 
 def price_schedule(sched: PipelineSchedule,
                    durations: "Mapping[tuple[int, str], float] | "
-                              "Callable[[int, str], float] | None" = None
-                   ) -> PricedSchedule:
+                              "Callable[[int, str], float] | None" = None,
+                   *,
+                   comm: "Mapping[tuple[int, str], float] | "
+                         "Callable[[int, str], float] | None" = None,
+                   overlap: bool = False) -> PricedSchedule:
     """Re-time ``sched`` under non-uniform tick durations.
 
     ``durations`` maps ``(virtual stage, phase) -> seconds`` (mapping or
@@ -273,6 +276,17 @@ def price_schedule(sched: PipelineSchedule,
     with per-stage costs (``costmodel.pipeline_tick_durations``) the
     makespan is the critical-path time of the timetable the executors
     would actually run.
+
+    ``comm`` optionally maps ``(virtual stage, phase) -> seconds`` of
+    communication attributable to the tick (P2P sends plus, on backward
+    ticks, eager grad-reduce issue).  A synchronous executor serializes
+    it after compute, so each tick costs ``compute + comm``; with
+    ``overlap=True`` the tick is priced as the async executor runs it —
+    comm streams behind the next tick's compute, so the tick occupies
+    ``max(compute, comm)``.  Because ``max(a, b) <= a + b`` for
+    non-negative costs, overlap pricing can never exceed sync pricing of
+    the same (durations, comm) split.  ``comm=None`` (the default)
+    prices exactly as before this knob existed, whatever ``overlap``.
     """
     if durations is None:
         get = lambda s, ph: 1.0                      # noqa: E731
@@ -280,6 +294,12 @@ def price_schedule(sched: PipelineSchedule,
         get = durations
     else:
         get = lambda s, ph: float(durations[(s, ph)])  # noqa: E731
+    if comm is None:
+        cget = lambda s, ph: 0.0                     # noqa: E731
+    elif callable(comm):
+        cget = comm
+    else:
+        cget = lambda s, ph: float(comm[(s, ph)])    # noqa: E731
     starts: dict = {}
     finishes: dict = {}
     avail: dict[int, float] = {}
@@ -303,7 +323,9 @@ def price_schedule(sched: PipelineSchedule,
                     f"cannot price invalid schedule: tick {key} runs "
                     f"before its dependency {d}")
             start = max(start, finishes[d])
-        dur = get(t.stage, t.phase)
+        comp = get(t.stage, t.phase)
+        cdur = cget(t.stage, t.phase)
+        dur = max(comp, cdur) if overlap else comp + cdur
         starts[key] = start
         finishes[key] = start + dur
         avail[dev] = start + dur

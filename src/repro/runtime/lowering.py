@@ -223,7 +223,7 @@ class PlanLowering:
 
     def __init__(self, plan: CommPlan, shape: tuple[int, ...],
                  order: DeviceOrder, axis: str, n_mesh: int, *,
-                 reduction: str = "exact"):
+                 reduction: str = "exact", fuse_permutes: bool = True):
         if reduction not in REDUCTIONS:
             raise ValueError(f"reduction must be one of {REDUCTIONS}")
         if plan.src is None:
@@ -240,6 +240,12 @@ class PlanLowering:
         self.axis = axis
         self.n_mesh = n_mesh
         self.reduction = reduction
+        # fuse_permutes=False is the GSPMD-resharding baseline for the
+        # overlap micro-benchmark: every (src, dst) copy becomes its own
+        # single-pair ppermute round and the uniform switch-free fast
+        # paths are disabled, so each delivery is a separate collective
+        # launch (same bits, more launches)
+        self.fuse_permutes = fuse_permutes
         self.stats = LoweringStats()
         self.has_reduce = any(g.reduce for s in plan.steps for g in s.groups)
         # set while walking the groups below: exact mode only needs the
@@ -256,9 +262,10 @@ class PlanLowering:
         self._uniform_stages: list[dict | None] = []
         prev = plan.src
         for stage in plan.stages:
-            uni = self._uniform_stage_static(stage, prev) \
-                or self._uniform_ident_static(stage, prev) \
-                or self._uniform_gather_static(stage, prev)
+            uni = (self._uniform_stage_static(stage, prev)
+                   or self._uniform_ident_static(stage, prev)
+                   or self._uniform_gather_static(stage, prev)) \
+                if fuse_permutes else None
             self._uniform_stages.append(uni)
             if uni is not None:
                 if uni["kind"] == "reduce":
@@ -292,7 +299,14 @@ class PlanLowering:
             kinds = "+".join(st.kind for st in stage.steps)
             check_stage_coverage(prev, stage.annot_after, deliveries,
                                  self.shape, kinds)
-            rounds = _fuse_rounds(pairs)
+            if fuse_permutes:
+                rounds = _fuse_rounds(pairs)
+            else:               # GSPMD-style: one ppermute per pair
+                rounds = []
+                for s, d, g in pairs:
+                    r = _Round()
+                    r.add(s, d, g)
+                    rounds.append(r)
             self._stage_rounds.append(rounds)
             if uni is None:    # uniform stages never emit the rounds
                 self.stats.copy_pairs += len(pairs)
@@ -746,12 +760,16 @@ def maybe_x64(fn, needs_x64: bool):
 def lower_plan(plan: CommPlan, shape: tuple[int, ...], mesh,
                order: DeviceOrder | None = None, *,
                reduction: str = "exact", dtype=None,
-               stats_out: LoweringStats | None = None):
+               stats_out: LoweringStats | None = None,
+               fuse_permutes: bool = True):
     """Compile ``plan`` into a jitted ``f(stacked) -> stacked`` over ``mesh``.
 
     ``stacked`` has shape ``(mesh_size, *pad_shape(plan.src))``: row
     ``order.pos(dev)`` holds device ``dev``'s (zero-padded) local shard.
     The result is stacked the same way under the final stage annotation.
+    ``fuse_permutes=False`` lowers copies GSPMD-resharding style — one
+    ppermute per (src, dst) pair, uniform fast paths off — the baseline
+    the batched-permute fusion micro-benchmark measures against.
     """
     import jax
     from jax.experimental.shard_map import shard_map
@@ -761,7 +779,8 @@ def lower_plan(plan: CommPlan, shape: tuple[int, ...], mesh,
     axis = mesh.axis_names[0]
     n_mesh = int(mesh.devices.size)
     lowering = PlanLowering(plan, shape, order, axis, n_mesh,
-                            reduction=reduction)
+                            reduction=reduction,
+                            fuse_permutes=fuse_permutes)
     if stats_out is not None:
         stats_out.merge(lowering.stats)
 

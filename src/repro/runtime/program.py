@@ -58,6 +58,174 @@ from .lowering import (DeviceOrder, LoweringStats, PlanLowering, maybe_x64,
                        pack_shards, pad_shape)
 
 
+# ---------------------------------------------------------------------------
+# shared emission helpers (whole-graph AND per-stage lowerings)
+#
+# LoweredGraph (one scanned program) and runtime.async_program (one
+# program per virtual pipeline stage) trace the SAME per-class segment
+# code through these functions, which is what keeps the two backends
+# bitwise interchangeable: a segment's class branches, dtype chain and
+# pad/unpad slicing are one definition, not two.
+# ---------------------------------------------------------------------------
+
+def segment_liveness(graph: Graph, segments, fetches
+                     ) -> dict[int, tuple[list[str], list[str]]]:
+    """``id(segment) -> (live_in, live_out)``: values produced AND
+    consumed inside one segment stay unpadded inside its branches; only
+    live-outs (consumed by ops outside the segment, or fetched)
+    materialize as stacked ``(mesh, *pad)`` buffers."""
+    consumers: dict[str, set[int]] = {}
+    for op in graph.ops:
+        for t in op.inputs:
+            consumers.setdefault(t.name, set()).add(id(op))
+    fetch_set = set(fetches)
+    out: dict[int, tuple[list[str], list[str]]] = {}
+    for seg in segments:
+        seg_ids = {id(op) for op in seg.ops}
+        produced: list[str] = [op.outputs[0].name for op in seg.ops]
+        produced_set = set(produced)
+        live_in: list[str] = []
+        for op in seg.ops:
+            for t in op.inputs:
+                if t.name not in produced_set and t.name not in live_in:
+                    live_in.append(t.name)
+        live_out = [n for n in produced
+                    if n in fetch_set
+                    or (consumers.get(n, set()) - seg_ids)]
+        out[id(seg)] = (live_in, live_out)
+    return out
+
+
+def run_segment_class(seg, cls, dtypes, live_in, live_out, out_pads, vs):
+    """Trace one class's local program over the segment: slice live-ins
+    to the class's exact local shapes once, keep every interior value
+    unpadded, re-pad only the live-outs."""
+    import jax.numpy as jnp
+
+    local = dict(zip(live_in, vs))
+    exact: dict[str, object] = {}
+    for op, spec in zip(seg.ops, cls.specs):
+        if spec is None:
+            continue        # this class does not run the op
+        ins = []
+        for t, shp in zip(op.inputs, spec.in_shapes):
+            v = exact.get(t.name)
+            if v is None:
+                v = local[t.name]
+                if tuple(v.shape) != tuple(shp):
+                    v = v[tuple(slice(0, s) for s in shp)]
+            ins.append(v)
+        name = op.outputs[0].name
+        if spec.impl == "pallas":
+            from repro.kernels.ops import attention as attn_kernel
+            y = attn_kernel(*ins,
+                            causal=op.attrs.get("causal", True),
+                            use_kernel="pallas")
+        else:
+            y = local_apply(op.kind, jnp, ins, op.attrs, spec.out_shape)
+        exact[name] = y.astype(dtypes[name])
+    outs = []
+    for name in live_out:
+        pad = out_pads[name]
+        y = exact.get(name)
+        if y is None:
+            outs.append(jnp.zeros(pad, dtypes[name]))
+        elif tuple(y.shape) == pad:
+            outs.append(y)
+        else:
+            outs.append(jnp.zeros(pad, dtypes[name]).at[
+                tuple(slice(0, s) for s in y.shape)].set(y))
+    return tuple(outs)
+
+
+def emit_segment(seg, tenv, i, *, seg_live, graph: Graph, k: int,
+                 shapes, order: DeviceOrder, n_mesh: int) -> None:
+    """Emit one compute segment into the traced env ``tenv``: one branch
+    per specialization class (straight-line when homogeneous over the
+    whole mesh), plus a zero branch when some mesh position idles."""
+    import jax
+    import jax.numpy as jnp
+
+    live_in, live_out = seg_live[id(seg)]
+    if not live_out:
+        return              # dead code: nothing escapes
+    # shared dtype chain (class-independent: promotion depends only on
+    # input dtypes, identical across classes)
+    dtypes: dict[str, np.dtype] = {}
+    for op in seg.ops:
+        dtypes[op.outputs[0].name] = result_dtype(
+            op.kind,
+            [dtypes.get(t.name, None)
+             or np.dtype(tenv[t.name].dtype)
+             for t in op.inputs])
+    out_pads = {
+        n: pad_shape(graph.tensors[n].annots[k], shapes[n])
+        for n in live_out}
+    args = [tenv[n] for n in live_in]
+    n_cls = seg.n_classes
+    pos_cls = []
+    for p in range(n_mesh):
+        c = seg.class_of(order.devices[p]) if p < len(order) else None
+        pos_cls.append(n_cls if c is None else c)
+    if n_cls == 1 and all(c == 0 for c in pos_cls):
+        outs = run_segment_class(seg, seg.classes[0], dtypes, live_in,
+                                 live_out, out_pads, args)
+    else:
+        branches = [
+            (lambda cls: lambda *vs: run_segment_class(
+                seg, cls, dtypes, live_in, live_out, out_pads, vs))(cls)
+            for cls in seg.classes]
+        if any(c == n_cls for c in pos_cls):
+            branches.append(lambda *vs: tuple(
+                jnp.zeros(out_pads[n], dtypes[n]) for n in live_out))
+        tbl = jnp.asarray(pos_cls, jnp.int32)
+        outs = jax.lax.switch(tbl[i], branches, *args)
+    for name, y in zip(live_out, outs):
+        tenv[name] = y
+
+
+def fetch_rows(outs, n_mesh: int) -> list:
+    """Per-mesh-position host rows for each fetched device array.
+
+    On the CPU backend each per-device shard is host memory already, so
+    ``np.from_dlpack`` views it without the stitch-and-copy that
+    ``jax.device_get`` performs on a sharded array (the DLPack capsule
+    keeps the jax buffer alive for as long as the views are).  Falls
+    back to one bulk ``device_get`` elsewhere."""
+    import jax
+
+    try:
+        per_out = []
+        for out in outs:
+            rows: list = [None] * n_mesh
+            for sh in out.addressable_shards:
+                idx = sh.index[0]
+                pos = (idx.start or 0) if isinstance(idx, slice) \
+                    else int(idx)
+                rows[pos] = np.from_dlpack(sh.data)[0]
+            if any(r is None for r in rows):
+                raise ValueError("unaddressable shard")
+            per_out.append(rows)
+        return per_out
+    except Exception:
+        return [[arr[i] for i in range(n_mesh)]
+                for arr in jax.device_get(outs)]
+
+
+def unpack_rows(graph: Graph, k: int, shapes, order: DeviceOrder,
+                name: str, rows: list) -> ShardedTensor:
+    """Stacked host rows -> ShardedTensor under ``name``'s annotation
+    (parts are views into the rows; callers never mutate shards in
+    place)."""
+    annot = graph.tensors[name].annots[k]
+    shape = shapes[name]
+    parts = {
+        dev: rows[order.pos(dev)][
+            tuple(slice(0, s) for s in annot.device_shape(dev, shape))]
+        for dev in annot.devices}
+    return ShardedTensor(shape, annot, parts)
+
+
 class LoweredGraph:
     """A deduced graph + strategy compiled to one shard_map program,
     reusable over fresh shard values without retracing.
@@ -174,29 +342,10 @@ class LoweredGraph:
                                   impl_of=impl_of,
                                   devices=self.order.devices)
 
-        # static per-segment liveness: values produced AND consumed
-        # inside one segment stay unpadded inside its branches; only
-        # live-outs materialize as stacked (mesh, *pad) buffers
-        consumers: dict[str, set[int]] = {}
-        for op in graph.ops:
-            for t in op.inputs:
-                consumers.setdefault(t.name, set()).add(id(op))
-        fetch_set = set(self.fetches)
-        self._seg_live: dict[int, tuple[list[str], list[str]]] = {}
-        for seg in self.ir.segments:
-            seg_ids = {id(op) for op in seg.ops}
-            produced: list[str] = [op.outputs[0].name for op in seg.ops]
-            produced_set = set(produced)
-            live_in: list[str] = []
-            for op in seg.ops:
-                for t in op.inputs:
-                    if t.name not in produced_set and \
-                            t.name not in live_in:
-                        live_in.append(t.name)
-            live_out = [n for n in produced
-                        if n in fetch_set
-                        or (consumers.get(n, set()) - seg_ids)]
-            self._seg_live[id(seg)] = (live_in, live_out)
+        # static per-segment liveness (shared helper; also used by the
+        # per-stage async lowering)
+        self._seg_live = segment_liveness(graph, self.ir.segments,
+                                          self.fetches)
 
         # branch accounting: the structural win the benchmark records.
         # A homogeneous segment (one class, every mesh position) is
@@ -222,90 +371,7 @@ class LoweredGraph:
                             self.stats.ref_dispatches += 1
 
         order, n_mesh = self.order, self.n_mesh
-
-        def run_class(seg, cls, dtypes, live_in, live_out, out_pads, vs):
-            """Trace one class's local program over the segment: slice
-            live-ins to the class's exact local shapes once, keep every
-            interior value unpadded, re-pad only the live-outs."""
-            import jax.numpy as jnp
-            local = dict(zip(live_in, vs))
-            exact: dict[str, object] = {}
-            for op, spec in zip(seg.ops, cls.specs):
-                if spec is None:
-                    continue        # this class does not run the op
-                ins = []
-                for t, shp in zip(op.inputs, spec.in_shapes):
-                    v = exact.get(t.name)
-                    if v is None:
-                        v = local[t.name]
-                        if tuple(v.shape) != tuple(shp):
-                            v = v[tuple(slice(0, s) for s in shp)]
-                    ins.append(v)
-                name = op.outputs[0].name
-                if spec.impl == "pallas":
-                    from repro.kernels.ops import attention as attn_kernel
-                    y = attn_kernel(*ins,
-                                    causal=op.attrs.get("causal", True),
-                                    use_kernel="pallas")
-                else:
-                    y = local_apply(op.kind, jnp, ins, op.attrs,
-                                    spec.out_shape)
-                exact[name] = y.astype(dtypes[name])
-            outs = []
-            for name in live_out:
-                pad = out_pads[name]
-                y = exact.get(name)
-                if y is None:
-                    outs.append(jnp.zeros(pad, dtypes[name]))
-                elif tuple(y.shape) == pad:
-                    outs.append(y)
-                else:
-                    outs.append(jnp.zeros(pad, dtypes[name]).at[
-                        tuple(slice(0, s) for s in y.shape)].set(y))
-            return tuple(outs)
-
-        def emit_segment(seg, tenv, i):
-            import jax
-            import jax.numpy as jnp
-            live_in, live_out = self._seg_live[id(seg)]
-            if not live_out:
-                return              # dead code: nothing escapes
-            # shared dtype chain (class-independent: promotion depends
-            # only on input dtypes, identical across classes)
-            dtypes: dict[str, np.dtype] = {}
-            for op in seg.ops:
-                dtypes[op.outputs[0].name] = result_dtype(
-                    op.kind,
-                    [dtypes.get(t.name, None)
-                     or np.dtype(tenv[t.name].dtype)
-                     for t in op.inputs])
-            out_pads = {
-                n: pad_shape(graph.tensors[n].annots[k], shapes[n])
-                for n in live_out}
-            args = [tenv[n] for n in live_in]
-            n_cls = seg.n_classes
-            pos_cls = []
-            for p in range(n_mesh):
-                c = seg.class_of(order.devices[p]) \
-                    if p < len(order) else None
-                pos_cls.append(n_cls if c is None else c)
-            if n_cls == 1 and all(c == 0 for c in pos_cls):
-                outs = run_class(seg, seg.classes[0], dtypes, live_in,
-                                 live_out, out_pads, args)
-            else:
-                branches = [
-                    (lambda cls: lambda *vs: run_class(
-                        seg, cls, dtypes, live_in, live_out, out_pads,
-                        vs))(cls)
-                    for cls in seg.classes]
-                if any(c == n_cls for c in pos_cls):
-                    branches.append(lambda *vs: tuple(
-                        jnp.zeros(out_pads[n], dtypes[n])
-                        for n in live_out))
-                tbl = jnp.asarray(pos_cls, jnp.int32)
-                outs = jax.lax.switch(tbl[i], branches, *args)
-            for name, y in zip(live_out, outs):
-                tenv[name] = y
+        seg_live = self._seg_live
 
         # placeholders carry a per-microbatch axis in microbatched mode;
         # parameters are microbatch-invariant and stay single-buffer
@@ -397,7 +463,9 @@ class LoweredGraph:
                     pend = [n for n in live_in if n in deferred]
                     if pend:
                         flush(pend)
-                    emit_segment(entry, tenv, i)
+                    emit_segment(entry, tenv, i, seg_live=seg_live,
+                                 graph=graph, k=k, shapes=shapes,
+                                 order=order, n_mesh=n_mesh)
             flush()
             return tenv
 
@@ -485,43 +553,11 @@ class LoweredGraph:
         return jax.device_put(blocks, shardings)
 
     def _unpack(self, name: str, rows: list) -> ShardedTensor:
-        # parts are views into the fetched host rows (we own them; the
-        # optimizer and gather paths never mutate shards in place)
-        annot = self.graph.tensors[name].annots[self.k]
-        shape = self.shapes[name]
-        parts = {
-            dev: rows[self.order.pos(dev)][
-                tuple(slice(0, s)
-                      for s in annot.device_shape(dev, shape))]
-            for dev in annot.devices}
-        return ShardedTensor(shape, annot, parts)
+        return unpack_rows(self.graph, self.k, self.shapes, self.order,
+                           name, rows)
 
     def _fetch_rows(self, outs) -> list:
-        """Per-mesh-position host rows for each fetched device array.
-
-        On the CPU backend each per-device shard is host memory already,
-        so ``np.from_dlpack`` views it without the stitch-and-copy that
-        ``jax.device_get`` performs on a sharded array (the DLPack
-        capsule keeps the jax buffer alive for as long as the views
-        are).  Falls back to one bulk ``device_get`` elsewhere."""
-        import jax
-
-        try:
-            per_out = []
-            for out in outs:
-                rows: list = [None] * self.n_mesh
-                for sh in out.addressable_shards:
-                    idx = sh.index[0]
-                    pos = (idx.start or 0) if isinstance(idx, slice) \
-                        else int(idx)
-                    rows[pos] = np.from_dlpack(sh.data)[0]
-                if any(r is None for r in rows):
-                    raise ValueError("unaddressable shard")
-                per_out.append(rows)
-            return per_out
-        except Exception:
-            return [[arr[i] for i in range(self.n_mesh)]
-                    for arr in jax.device_get(outs)]
+        return fetch_rows(outs, self.n_mesh)
 
     def run(self, state: dict[str, ShardedTensor]
             ) -> dict[str, ShardedTensor]:

@@ -13,9 +13,12 @@ paper's Fig 9 heterogeneous multi-step stage, resharding round-trips, the
 dynamic-switch weight migration through the fused-BSR path on the jax
 backend, the microbatched pipeline schedules (``api:pipeline/*``:
 1F1B/GPipe over 2 stages, and ``api:pipeline/interleaved*``: Megatron's
-v=2 virtual-stage schedule over a zigzag plan), and the automated
-strategy search's execution validation (``repro.search`` top-3 on a
-hetero CPU fixture), all bit-exact sim vs jax.  Emits one
+v=2 virtual-stage schedule over a zigzag plan), the async MPMD executor
+(``async:pipeline/*`` and ``async:train/4``: per-stage programs with
+double-buffered P2P and eager grad-reduce, bitwise vs both executors),
+and the automated strategy search's execution validation
+(``repro.search`` top-3 on a hetero CPU fixture), all bit-exact sim vs
+jax.  Emits one
 machine-readable line: ``RUNTIME_SELFTEST_JSON {...}``
 (consumed by ``tests/test_runtime.py``).
 """
@@ -579,7 +582,134 @@ def run_all(max_devices: int = 8) -> dict:
     if 4 in meshes:
         record("api:train/hetero4", train_hetero_case)
 
-    # 7f. automated strategy search, execution-validated: the searcher
+    # 7f. async MPMD executor (``runtime.async_program``): ONE XLA
+    #     program per (virtual stage, phase) with double-buffered P2P
+    #     channels and grad-reduce issued eagerly after each backward
+    #     tick must stay BITWISE equal to the simulator and the scanned
+    #     jax program across m x {1f1b, gpipe, interleaved} — overlap
+    #     may only reorder independent work, never change a bit
+    for n, mesh in meshes.items():
+        def async_pipeline_case(n=n, mesh=mesh):
+            from repro import api
+            from repro.api.testing import (loss_pipeline_program,
+                                           loss_pipeline_values)
+
+            prog = loss_pipeline_program(n, name=f"pipe{n}")
+            xv, ws, want_y = loss_pipeline_values(seed=11)
+            runs = {}
+            for ex in (api.SimulatorExecutor(), api.JaxExecutor(mesh),
+                       api.AsyncExecutor(mesh)):
+                sess = api.Session(prog, f"pipe{n}", executor=ex)
+                sess.load(ws)
+                for m in (1, 2, 4):
+                    for kind in (("1f1b", "gpipe", "interleaved")
+                                 if m > 1 else ("1f1b",)):
+                        r = sess.run({"X": xv}, fetches=["Y", "L"],
+                                     num_microbatches=m, schedule=kind)
+                        np.testing.assert_array_equal(r.value("Y"),
+                                                      want_y)
+                        assert float(r.value("L")) == float(want_y.sum())
+                        runs[(ex.name, m, kind)] = r
+            # per-device shards bitwise equal across executors at each
+            # (m, kind) — L is Partial, so its per-device summands are
+            # only comparable at the same microbatching
+            for (exn, m, kind), r in runs.items():
+                if exn == "sim":
+                    continue
+                for name in ("Y", "L"):
+                    a = runs[("sim", m, kind)].shards(name)
+                    b = r.shards(name)
+                    for dev in a.parts:
+                        np.testing.assert_array_equal(
+                            b.parts[dev], a.parts[dev],
+                            err_msg=f"{name} dev {dev}: {exn}/m={m}/"
+                                    f"{kind} differs from sim (async)")
+            # per-stage MPMD really happened: one fwd + one bwd program
+            # per virtual stage, and the boundary P2P + grad reduces
+            # run as channels, not inside the epilogue
+            ax = api.AsyncExecutor(mesh)
+            lw = ax.lowered(prog.compile_train(f"pipe{n}"))
+            n_virtual = prog.compile(f"pipe{n}").n_stages
+            assert len(lw.programs) == 2 * n_virtual, \
+                (sorted(lw.programs), n_virtual)
+            if n >= 4:      # n=2: 1-device stages -> no partial grads
+                assert any(ch.kind == "reduce" for ch in lw.channels), \
+                    [ch.kind for ch in lw.channels]
+            if n_virtual > 1:
+                assert any(ch.kind == "p2p" for ch in lw.channels), \
+                    [ch.kind for ch in lw.channels]
+            return {"programs": len(lw.programs),
+                    "channels": len(lw.channels)}
+        record(f"async:pipeline/{n}", async_pipeline_case)
+
+    # 7g. async TRAINING: losses, gradient shards and updated weight
+    #     shards bit-exact vs both executors across m and kinds,
+    #     including the v=2 interleaved zigzag (virtual stages multiplex
+    #     one device's two chunks onto distinct per-chunk programs)
+    def async_train_case():
+        from repro import api
+        from repro.api.testing import (loss_pipeline_program,
+                                       loss_pipeline_values,
+                                       zigzag_program, zigzag_values)
+
+        prog = loss_pipeline_program(4, name="pipe4")
+        xv, ws, want_y = loss_pipeline_values(seed=11)
+        want_loss = float(want_y.sum())
+        runs = {}
+        for m, kind in [(1, "1f1b"), (2, "1f1b"), (4, "1f1b"),
+                        (4, "gpipe")]:
+            for ex in (api.SimulatorExecutor(), api.JaxExecutor(meshes[4]),
+                       api.AsyncExecutor(meshes[4])):
+                sess = api.Session(prog, "pipe4", executor=ex)
+                sess.load(ws)
+                r = sess.train_step({"X": xv}, num_microbatches=m,
+                                    schedule=kind)
+                assert r.loss == want_loss, (ex.name, m, kind, r.loss)
+                runs[(ex.name, m, kind)] = (
+                    r, {w: sess.weights[w] for w in ws})
+        base, base_w = runs[("sim", 1, "1f1b")]
+        for (exn, m, kind), (r, w) in runs.items():
+            for name in ws:
+                a, b = base.grads[name], r.grads[name]
+                for dev in a.parts:
+                    np.testing.assert_array_equal(
+                        b.parts[dev], a.parts[dev],
+                        err_msg=f"grad {name} dev {dev}: {exn}/m={m}/"
+                                f"{kind} differs (async train)")
+                aw, bw = base_w[name], w[name]
+                for dev in aw.parts:
+                    np.testing.assert_array_equal(
+                        bw.parts[dev], aw.parts[dev],
+                        err_msg=f"weight {name} dev {dev}: {exn}/m={m}/"
+                                f"{kind} differs (async train)")
+
+        # interleaved v=2 zigzag training through the async path
+        zprog = zigzag_program(4, name="zig4")
+        zx, zws, zwant_y = zigzag_values(seed=13)
+        zruns = {}
+        for m in (1, 2, 4):
+            for ex in (api.SimulatorExecutor(),
+                       api.AsyncExecutor(meshes[4])):
+                sess = api.Session(zprog, "zig4", executor=ex)
+                sess.load(zws)
+                r = sess.train_step({"X": zx}, num_microbatches=m,
+                                    schedule="interleaved")
+                assert r.loss == float(zwant_y.sum()), (ex.name, m)
+                zruns[(ex.name, m)] = r
+        zbase = zruns[("sim", 1)]
+        for (exn, m), r in zruns.items():
+            for name in zws:
+                a, b = zbase.grads[name], r.grads[name]
+                for dev in a.parts:
+                    np.testing.assert_array_equal(
+                        b.parts[dev], a.parts[dev],
+                        err_msg=f"grad {name} dev {dev}: {exn}/m={m} "
+                                f"(async interleaved train)")
+        return {"loss": want_loss, "zigzag_loss": zbase.loss}
+    if 4 in meshes:
+        record("async:train/4", async_train_case)
+
+    # 7h. automated strategy search, execution-validated: the searcher
     #     enumerates/prunes/ranks candidates for a 2-fast + 2-slow CPU
     #     fixture, executes the top-3 as proxy TRAINING programs on both
     #     executors (losses + gradients bit-exact sim vs jax), and the
@@ -610,7 +740,7 @@ def run_all(max_devices: int = 8) -> dict:
     if 4 in meshes:
         record("search:hetero/4", search_case)
 
-    # 7g. the elastic trace driver: real train_steps through device
+    # 7i. the elastic trace driver: real train_steps through device
     #     loss/join — each 2-transition trace re-selects a strategy for
     #     the surviving ranks and migrates weights AND AdamW m/v
     #     restart-free (Session.switch, fused BSR).  The probe fixture's

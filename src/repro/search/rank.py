@@ -73,14 +73,15 @@ class RankedCandidate:
 
 def predict_step_time(cluster: ClusterSpec, model: ModelSpec,
                       cand: Candidate, seq_len: int, *,
-                      fwd_fraction: float | None = None
-                      ) -> RankedCandidate:
+                      fwd_fraction: float | None = None,
+                      overlap: bool = False) -> RankedCandidate:
     strat = cand.strategy
     assert strat is not None, f"cannot price rejected {cand.name}"
     kind = "interleaved" if cand.v > 1 else cand.schedule
     t_pipe = max(pipeline_time(
         cluster, model, p, seq_len, kind=kind,
-        virtual_stages_per_device=cand.v, fwd_fraction=fwd_fraction)
+        virtual_stages_per_device=cand.v, fwd_fraction=fwd_fraction,
+        overlap=overlap)
         for p in strat.pipelines)
     t_sync = dp_sync_time(cluster, model, strat)
     return RankedCandidate(cand, t_pipe + t_sync, t_pipe, t_sync,
@@ -90,13 +91,16 @@ def predict_step_time(cluster: ClusterSpec, model: ModelSpec,
 def rank(cluster: ClusterSpec, model: ModelSpec,
          candidates: list[Candidate] | tuple[Candidate, ...],
          seq_len: int, *,
-         fwd_fraction: float | str | None = "measured"
-         ) -> list[RankedCandidate]:
+         fwd_fraction: float | str | None = "measured",
+         overlap: bool = False) -> list[RankedCandidate]:
     """Survivors sorted fastest-first (name breaks exact ties, keeping
-    the order deterministic)."""
+    the order deterministic).  ``overlap=True`` scores candidates for
+    the async executor: boundary transfers are priced ``max(compute,
+    comm)`` per tick instead of serialized after compute — pipelines
+    whose boundaries the async runtime can hide rank accordingly."""
     frac = resolve_fwd_fraction(fwd_fraction)
     ranked = [predict_step_time(cluster, model, c, seq_len,
-                                fwd_fraction=frac)
+                                fwd_fraction=frac, overlap=overlap)
               for c in candidates]
     ranked.sort(key=lambda rc: (rc.predicted_step_s, rc.name))
     return ranked

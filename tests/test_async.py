@@ -1,0 +1,89 @@
+"""Async MPMD executor: registry wiring and structured error surfaces.
+
+The multi-device bitwise parity sweep (``async:pipeline/{2,4,8}``,
+``async:train/4``) runs in the subprocess selftest and is asserted from
+``tests/test_runtime.py``; here we pin the in-process contract — the
+executor registry, and that unknown executor names / unsupported
+schedule kinds fail with errors that NAME the valid options.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.schedule import build_schedule
+
+
+def test_get_executor_registry_includes_async():
+    ex = api.get_executor("async")
+    assert isinstance(ex, api.AsyncExecutor)
+    assert ex.name == "async"
+    assert set(ex.supported_schedules) == {"1f1b", "gpipe", "interleaved"}
+    # constructor kwargs pass through like the other executors'
+    assert api.get_executor("async", serialize=True).serialize
+    with pytest.raises(TypeError):
+        api.get_executor("async", record_ticks=True)
+
+
+def test_unknown_executor_error_lists_valid_names():
+    with pytest.raises(ValueError) as e:
+        api.get_executor("tpu")
+    msg = str(e.value)
+    for name in ("async", "jax", "sim"):
+        assert name in msg, msg
+    assert "tpu" in msg
+
+
+def test_async_executor_rejects_unknown_schedule_kind():
+    """run_schedule validates the kind BEFORE lowering anything, so a
+    bogus timetable fails fast with the supported kinds listed."""
+    sched = dataclasses.replace(build_schedule(2, 2, "1f1b"), kind="ring")
+    ex = api.AsyncExecutor()
+    with pytest.raises(api.ScheduleError) as e:
+        ex.run_schedule(SimpleNamespace(n_stages=2), sched,
+                        [{}, {}])
+    msg = str(e.value)
+    assert "'ring'" in msg
+    for kind in ("1f1b", "gpipe", "interleaved"):
+        assert kind in msg, msg
+
+
+def test_async_executor_rejects_mismatched_states_and_stages():
+    sched = build_schedule(2, 2, "1f1b")
+    ex = api.AsyncExecutor()
+    with pytest.raises(api.ScheduleError, match="microbatch"):
+        ex.run_schedule(SimpleNamespace(n_stages=2), sched, [{}])
+    with pytest.raises(api.ScheduleError, match="stage"):
+        ex.run_schedule(SimpleNamespace(n_stages=3), sched, [{}, {}])
+
+
+def test_session_rejects_kind_unsupported_by_executor():
+    """Session consults executor.supported_schedules up front: an
+    executor that only speaks gpipe turns a 1f1b request into a
+    structured error naming the executor and its kinds."""
+    from repro.api.testing import (loss_pipeline_program,
+                                   loss_pipeline_values)
+
+    class GPipeOnly(api.SimulatorExecutor):
+        name = "gpipe-only"
+        supported_schedules = ("gpipe",)
+
+    prog = loss_pipeline_program(2, name="pipe2")
+    xv, ws, want_y = loss_pipeline_values(seed=11)
+    sess = api.Session(prog, "pipe2", executor=GPipeOnly())
+    sess.load(ws)
+    r = sess.run({"X": xv}, fetches=["Y"], num_microbatches=2,
+                 schedule="gpipe")
+    np.testing.assert_array_equal(r.value("Y"), want_y)
+    with pytest.raises(api.ScheduleError) as e:
+        sess.run({"X": xv}, fetches=["Y"], num_microbatches=2,
+                 schedule="1f1b")
+    msg = str(e.value)
+    assert "gpipe-only" in msg and "'gpipe'" in msg, msg
+    # unknown kinds still fail on the global list first
+    with pytest.raises(api.ScheduleError, match="interleaved"):
+        sess.run({"X": xv}, fetches=["Y"], num_microbatches=2,
+                 schedule="ring")

@@ -142,6 +142,27 @@ def test_api_train_hetero_bit_exact(report):
     assert "SplitAR" in case["grad_comms"]["W1"]
 
 
+@pytest.mark.parametrize("ndev", NDEVS)
+def test_async_pipeline_bit_exact(report, ndev):
+    """Async MPMD executor acceptance: per-(virtual stage, phase) XLA
+    programs with double-buffered P2P channels and eager grad-reduce
+    stay BITWISE equal to the simulator and the scanned jax program
+    across m in {1,2,4} x {1f1b, gpipe, interleaved} — one fwd + one
+    bwd program per virtual stage, comm hoisted into channels."""
+    case = _case(report, f"async:pipeline/{ndev}")
+    assert case["programs"] == 4            # 2 virtual stages x 2 phases
+    assert case["channels"] >= 2            # boundary P2P both phases
+
+
+def test_async_train_bit_exact(report):
+    """Async TRAINING: losses, gradient shards and updated weight
+    shards bit-exact vs sim and jax across m x {1f1b, gpipe}, plus the
+    v=2 interleaved zigzag (per-chunk programs on one device)."""
+    case = _case(report, "async:train/4")
+    assert np.isfinite(case["loss"])
+    assert np.isfinite(case["zigzag_loss"])
+
+
 def test_search_validation_bit_exact_and_concordant(report):
     """The automated strategy search's execution validation: the top-3
     candidates for the 2-fast + 2-slow CPU fixture train bit-exact sim

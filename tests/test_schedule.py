@@ -609,3 +609,123 @@ def test_nonuniform_stages_priced_below_bottleneck_closed_form():
     closed_at_bottleneck = fill_drain_count(m, 2) * bottleneck
     assert got < closed_at_bottleneck
     assert got > m * bottleneck    # steady state alone costs this much
+
+# ---------------------------------------------------------------------------
+# overlap-aware pricing (async executor cost model)
+# ---------------------------------------------------------------------------
+
+def test_price_schedule_comm_none_is_unchanged():
+    """The comm/overlap knobs default to today's exact pricing: with
+    comm=None the overlap flag is inert, and zero comm is the same as
+    no comm."""
+    from repro.core.schedule import price_schedule
+    dur = lambda s, ph: 1.0 + 0.25 * s + (0.5 if ph == "bwd" else 0.0)
+    for kind in ("1f1b", "gpipe"):
+        for m in (1, 3, 8):
+            sched = build_schedule(4, m, kind)
+            base = price_schedule(sched, dur)
+            for overlap in (False, True):
+                got = price_schedule(sched, dur, comm=None,
+                                     overlap=overlap)
+                assert got.starts == base.starts
+                assert got.finishes == base.finishes
+                assert got.makespan == base.makespan
+            zero = price_schedule(sched, dur,
+                                  comm=lambda s, ph: 0.0, overlap=True)
+            assert zero.makespan == base.makespan
+
+
+def test_overlap_pricing_never_worse_and_strictly_better_when_comm_bound():
+    """max(compute, comm) <= compute + comm per tick, so the overlap
+    makespan can never exceed the sync makespan of the same split; when
+    every tick carries comm equal to its compute, overlap halves the
+    tick and the makespan strictly drops."""
+    from repro.core.schedule import price_schedule
+    dur = lambda s, ph: 2.0 if ph == "bwd" else 1.0
+    comm = lambda s, ph: 0.3 + 0.1 * (s % 2)
+    for kind in ("1f1b", "gpipe"):
+        for m in (1, 4, 8):
+            sched = build_schedule(3, m, kind)
+            sync = price_schedule(sched, dur, comm=comm).makespan
+            over = price_schedule(sched, dur, comm=comm,
+                                  overlap=True).makespan
+            assert over <= sync
+    sched = build_schedule(2, 4, "1f1b")
+    sync = price_schedule(sched, dur, comm=dur).makespan
+    over = price_schedule(sched, dur, comm=dur, overlap=True).makespan
+    assert over == pytest.approx(sync / 2)
+
+
+def test_pipeline_tick_split_reconstructs_sync_pricing():
+    """pipeline_tick_split decomposes each sync tick into compute+comm
+    with compute + comm == pipeline_tick_durations exactly, so pricing
+    the split WITHOUT overlap reproduces the sync makespan bit-for-bit
+    — the invariant that makes `overlap=True` trustworthy (same costs,
+    only the combining rule changes)."""
+    from repro.core.costmodel import (LLAMA_32B, PipelineSpec, Stage,
+                                      paper_cluster,
+                                      pipeline_tick_durations,
+                                      pipeline_tick_split)
+    from repro.core.schedule import price_schedule
+    cluster = paper_cluster(16, 16)
+    stages = (Stage(tuple(range(16, 24)), (0, 14)),
+              Stage(tuple(range(0, 8)), (14, 60)))
+    p = PipelineSpec(stages, 8, 1)
+    seq = 4096
+    sync = pipeline_tick_durations(cluster, LLAMA_32B, p, seq)
+    comp, comm = pipeline_tick_split(cluster, LLAMA_32B, p, seq)
+    assert set(comp) == set(sync) == set(comm)
+    for key in sync:
+        assert comp[key] + comm[key] == pytest.approx(sync[key], rel=1e-12)
+        assert comm[key] >= 0.0
+    sched = build_schedule(2, 8, "1f1b")
+    assert price_schedule(sched, comp, comm=comm).makespan == \
+        pytest.approx(price_schedule(sched, sync).makespan, rel=1e-12)
+
+
+def test_pipeline_time_overlap_never_worse():
+    """pipeline_time(..., overlap=True) <= sync pricing across kinds,
+    microbatch counts, and hetero/interleaved shapes; step_time and the
+    search ranking pass the flag through."""
+    from repro.core.costmodel import (LLAMA_32B, PipelineSpec, Stage,
+                                      paper_cluster, pipeline_time)
+    cluster = paper_cluster(16, 16)
+    cases = [
+        ((Stage(tuple(range(8)), (0, 30)),
+          Stage(tuple(range(8, 16)), (30, 60))), "1f1b", 1),
+        ((Stage(tuple(range(8)), (0, 30)),
+          Stage(tuple(range(8, 16)), (30, 60))), "gpipe", 1),
+        ((Stage(tuple(range(16, 24)), (0, 14)),
+          Stage(tuple(range(0, 8)), (14, 60))), "1f1b", 1),
+        ((Stage(tuple(range(8)), (0, 30)),
+          Stage(tuple(range(8, 16)), (30, 60))), "interleaved", 2),
+    ]
+    for stages, kind, v in cases:
+        for m in (2, 8):
+            p = PipelineSpec(stages, m, 1)
+            sync = pipeline_time(cluster, LLAMA_32B, p, 4096, kind=kind,
+                                 virtual_stages_per_device=v)
+            over = pipeline_time(cluster, LLAMA_32B, p, 4096, kind=kind,
+                                 virtual_stages_per_device=v,
+                                 overlap=True)
+            assert over <= sync * (1 + 1e-12)
+
+
+def test_step_time_and_rank_accept_overlap():
+    from repro.core.costmodel import (LLAMA_32B, paper_cluster, step_time,
+                                      uniform_strategy)
+    from repro.search.rank import predict_step_time
+    from repro.search.space import Candidate
+    cluster = paper_cluster(16, 16)
+    strat = uniform_strategy(list(range(16)), LLAMA_32B, dp=1, tp=8,
+                             pp=2, global_batch=8)
+    sync = step_time(cluster, LLAMA_32B, strat, 4096)
+    over = step_time(cluster, LLAMA_32B, strat, 4096, overlap=True)
+    assert over <= sync * (1 + 1e-12)
+    cand = Candidate(name="u-dp1tp8pp2", kind="uniform", dp=1, tp=8,
+                     pp=2, v=1, micro_bs=1, n_micro=8, schedule="1f1b",
+                     strategy=strat)
+    r_sync = predict_step_time(cluster, LLAMA_32B, cand, 4096)
+    r_over = predict_step_time(cluster, LLAMA_32B, cand, 4096,
+                               overlap=True)
+    assert r_over.predicted_step_s <= r_sync.predicted_step_s * (1 + 1e-12)
